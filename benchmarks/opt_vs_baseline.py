@@ -1,0 +1,40 @@
+"""§Perf summary: optimized vs baseline bounding roofline term per pair."""
+import json
+import pathlib
+
+import numpy as np
+
+HERE = pathlib.Path(__file__).resolve().parent
+BASE = HERE / "results" / "dryrun_baseline"
+NEW = HERE / "results" / "dryrun"
+
+
+def rows_for(mesh: str = "pod16x16"):
+    rows = []
+    for f in sorted(NEW.glob(f"*_{mesh}.json")):
+        b = BASE / f.name
+        if not b.exists():
+            continue
+        rb, rn = json.loads(b.read_text()), json.loads(f.read_text())
+        if rb.get("status") != "ok" or rn.get("status") != "ok":
+            continue
+        tb = max(rb["roofline"][k]
+                 for k in ("compute_s", "memory_s", "collective_s"))
+        tn = max(rn["roofline"][k]
+                 for k in ("compute_s", "memory_s", "collective_s"))
+        rows.append(dict(pair=f.name.replace(f"_{mesh}.json", ""),
+                         baseline_ms=round(tb * 1e3, 2),
+                         optimized_ms=round(tn * 1e3, 2),
+                         ratio=round(tn / tb, 3),
+                         dominant_after=rn["roofline"]["dominant"]))
+    return rows
+
+
+def run():
+    rows = rows_for()
+    if not rows:
+        return [], "baseline snapshot missing"
+    g = float(np.exp(np.mean([np.log(r["ratio"]) for r in rows])))
+    best = min(rows, key=lambda r: r["ratio"])
+    return rows, (f"geomean bounding-term ratio {g:.2f} over {len(rows)} "
+                  f"pairs; best {best['pair']} at {best['ratio']}")

@@ -1,0 +1,31 @@
+"""Perf-iteration helper: diff two dry-run result JSONs (before/after a
+change) on the three roofline terms.
+
+  PYTHONPATH=src python -m benchmarks.perf_diff \
+      benchmarks/results/dryrun_baseline/yi-6b_decode_32k_pod16x16.json \
+      benchmarks/results/dryrun/yi-6b_decode_32k_pod16x16.json
+"""
+import json
+import sys
+
+
+def diff(a_path: str, b_path: str) -> dict:
+    a = json.loads(open(a_path).read())
+    b = json.loads(open(b_path).read())
+    out = {"pair": f"{a['arch']} x {a['shape']} ({a['mesh']})"}
+    for k in ("compute_s", "memory_s", "collective_s"):
+        va, vb = a["roofline"][k], b["roofline"][k]
+        out[k] = dict(before_ms=round(va * 1e3, 3),
+                      after_ms=round(vb * 1e3, 3),
+                      delta_pct=round(100 * (vb / va - 1), 1) if va else None)
+    out["dominant"] = {"before": a["roofline"]["dominant"],
+                       "after": b["roofline"]["dominant"]}
+    pa = a["bytes_per_device"]["peak_estimate"] / 2 ** 30
+    pb = b["bytes_per_device"]["peak_estimate"] / 2 ** 30
+    out["gib_per_device"] = dict(before=round(pa, 2), after=round(pb, 2),
+                                 delta_pct=round(100 * (pb / pa - 1), 1))
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(diff(sys.argv[1], sys.argv[2]), indent=2))

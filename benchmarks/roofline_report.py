@@ -1,0 +1,62 @@
+"""§Roofline: aggregate the dry-run artifacts into the per-(arch x shape)
+three-term roofline table with MODEL_FLOPS utilisation ratios."""
+import json
+import pathlib
+
+from repro.configs import get_config
+from repro.launch.shapes import SHAPES
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results" / "dryrun"
+CHIPS = 256  # single-pod roofline table per the brief
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE); decode D = global_batch tokens."""
+    cfg = get_config(arch.replace("-swa", "") if arch.endswith("-swa")
+                     else arch)
+    spec = cfg.analytical_spec()
+    n = spec.streamed_params
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch          # decode: 1 token/seq
+
+
+def rows_for(mesh: str = "pod16x16"):
+    rows = []
+    for f in sorted(RESULTS.glob(f"*_{mesh}.json")):
+        r = json.loads(f.read_text())
+        if r["status"] != "ok":
+            rows.append(dict(arch=r["arch"], shape=r["shape"],
+                             status=r["status"],
+                             note=r.get("reason", r.get("error", ""))[:60]))
+            continue
+        rf = r["roofline"]
+        mf = model_flops(r["arch"], r["shape"])
+        hlo_total = rf["flops"] * CHIPS
+        rows.append(dict(
+            arch=r["arch"], shape=r["shape"], status="ok",
+            compute_ms=round(rf["compute_s"] * 1e3, 3),
+            memory_ms=round(rf["memory_s"] * 1e3, 3),
+            collective_ms=round(rf["collective_s"] * 1e3, 3),
+            dominant=rf["dominant"],
+            model_flops=f"{mf:.2e}",
+            useful_flops_ratio=round(mf / hlo_total, 3) if hlo_total else 0,
+            gib_per_device=round(
+                r["bytes_per_device"]["peak_estimate"] / 2 ** 30, 2)))
+    return rows
+
+
+def run():
+    rows = rows_for("pod16x16")
+    ok = [r for r in rows if r["status"] == "ok"]
+    if not ok:
+        return rows, "dry-run sweep not yet executed"
+    dom = {}
+    for r in ok:
+        dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+    return rows, f"pairs={len(rows)} ok={len(ok)} dominant_terms={dom}"

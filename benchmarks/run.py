@@ -1,0 +1,76 @@
+"""Benchmark harness: one module per paper table + kernel/engine timing +
+the roofline report.  Prints ``name,us_per_call,derived`` CSV and writes
+full row dumps to benchmarks/results/*.json.
+
+Run: PYTHONPATH=src python -m benchmarks.run [--only tableN]
+"""
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+
+
+def _suites():
+    from . import (beyond_paper, engine_bench, extra_sweeps, kernel_bench,
+                   roofline_report, table1_context_law, table2_model_archs,
+                   table3_fleet_topology, table4_semantic_routing,
+                   table5_gpu_generations, table6_archetypes,
+                   table7_power_params)
+    return {
+        "table1_context_law": table1_context_law.run,
+        "table2_model_archs": table2_model_archs.run,
+        "table3_fleet_topology": table3_fleet_topology.run,
+        "table4_semantic_routing": table4_semantic_routing.run,
+        "table5_gpu_generations": table5_gpu_generations.run,
+        "table6_archetypes": table6_archetypes.run,
+        "table7_power_params": table7_power_params.run,
+        "quantization_sweep": extra_sweeps.quantization,
+        "moe_dispatch_sensitivity": extra_sweeps.moe_dispatch,
+        "per_arch_one_over_w": extra_sweeps.per_arch_law,
+        "beyond_paper": beyond_paper.run,
+        "opt_vs_baseline": _opt_vs_baseline,
+        "kernel_bench": kernel_bench.run,
+        "engine_bench": engine_bench.run,
+        "roofline_report": roofline_report.run,
+    }
+
+
+def _opt_vs_baseline():
+    from . import opt_vs_baseline
+    return opt_vs_baseline.run()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in _suites().items():
+        if args.only and args.only not in name:
+            continue
+        t0 = time.perf_counter()
+        try:
+            rows, derived = fn()
+        except Exception as e:  # pragma: no cover
+            failed.append(name)
+            print(f"{name},ERROR,{type(e).__name__}: {e}")
+            continue
+        us = (time.perf_counter() - t0) * 1e6
+        (RESULTS / f"{name}.json").write_text(json.dumps(rows, indent=1))
+        # kernel/engine suites carry their own per-call timings
+        if rows and isinstance(rows[0], dict) and "us_per_call" in rows[0]:
+            for r in rows:
+                print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+        else:
+            print(f'{name},{us:.1f},"{derived}"')
+    if failed:
+        sys.exit(f"FAILED: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Table 1: n_max and tok/W vs context window (the 1/W law)."""
+from repro.core import B200_LLAMA70B, H100_LLAMA70B, context_sweep
+
+PAPER = {
+    "H100-SXM5": [(2048, 512, 598, 35.0), (4096, 256, 593, 17.6),
+                  (8192, 128, 583, 8.97), (16384, 64, 557, 4.69),
+                  (32768, 32, 507, 2.58), (65536, 16, 435, 1.50),
+                  (131072, 8, 369, 0.88)],
+    "B200-SXM": [(2048, 1343, 859, 61.4), (4096, 671, 857, 30.8),
+                 (8192, 335, 852, 15.5), (16384, 167, 838, 7.87),
+                 (32768, 83, 805, 4.09), (65536, 41, 735, 2.24),
+                 (131072, 20, 630, 1.30)],
+}
+
+
+def run():
+    rows = []
+    worst = 0.0
+    for gpu, prof in (("H100-SXM5", H100_LLAMA70B),
+                      ("B200-SXM", B200_LLAMA70B)):
+        sweep = context_sweep(prof)
+        for r, (ctx, nm, psat, tpw) in zip(sweep, PAPER[gpu]):
+            delta = r.tok_per_watt / tpw - 1
+            worst = max(worst, abs(delta))
+            rows.append(dict(gpu=gpu, context=ctx, n_max=r.n_max,
+                             n_max_paper=nm,
+                             p_sat_w=round(r.p_sat_w, 0),
+                             tok_per_watt=round(r.tok_per_watt, 2),
+                             tok_per_watt_paper=tpw,
+                             delta_pct=round(100 * delta, 1)))
+    return rows, f"worst_cell_delta={100 * worst:.1f}%"

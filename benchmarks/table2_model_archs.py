@@ -1,0 +1,51 @@
+"""Table 2: single-GPU tok/W across model families at 8K context.
+
+ComputedProfile throughout (replicated-KV storage mode, per the
+reverse-engineered Table-2 convention — DESIGN.md §4); MoE rows use the
+active-parameter W override (upper bound, dispatch excluded).
+"""
+from repro.core import computed_profile
+from repro.core.hardware import B200, H100
+from repro.core.modelspec import (DEEPSEEK_V3, LLAMA31_8B, LLAMA31_70B,
+                                  LLAMA31_405B, QWEN3_235B_A22B)
+from repro.core.moe import moe_profile
+from repro.core.power import B200_POWER, H100_POWER
+
+PAPER_TPW = {  # (model, gpu) -> paper tok/W
+    ("Llama-3.1-8B", "H100"): 6.46, ("Llama-3.1-8B", "B200"): 12.18,
+    ("Llama-3.1-70B", "H100"): 7.41, ("Llama-3.1-70B", "B200"): 20.93,
+    ("Llama-3.1-405B", "H100"): 0.09, ("Llama-3.1-405B", "B200"): 2.16,
+    ("Qwen3-235B-A22B", "H100"): 37.82, ("Qwen3-235B-A22B", "B200"): 177.73,
+    ("DeepSeek-V3", "H100"): 2.14, ("DeepSeek-V3", "B200"): 18.37,
+}
+
+MODELS = [(LLAMA31_8B, 1), (LLAMA31_70B, 8), (LLAMA31_405B, 8),
+          (QWEN3_235B_A22B, 8), (DEEPSEEK_V3, 8)]
+
+
+def run():
+    rows = []
+    for model, tp in MODELS:
+        for gname, chip, pm in (("H100", H100, H100_POWER),
+                                ("B200", B200, B200_POWER)):
+            mk = moe_profile if model.is_moe else computed_profile
+            prof = mk(model, chip, pm, tp=tp, kv_sharded=False)
+            n = prof.n_max(8192)
+            tpw = prof.tok_per_watt_at_window(8192)
+            rows.append(dict(
+                model=model.name, gpu=gname, tp=tp, n_max=n,
+                tok_s=round(prof.tokens_per_s(n, 8192), 0),
+                tok_per_watt=round(tpw, 2),
+                tok_per_watt_paper=PAPER_TPW[(model.name, gname)],
+                moe_upper_bound=model.is_moe))
+    # The paper's 5.1x cell divides n_max-throughput by ~P(1) power (its
+    # 405B row implies 289 W < the 300 W idle floor — internally
+    # inconsistent).  The physical §3.2 claim is the fixed-concurrency
+    # advantage in the weight-stream-bound regime:
+    dense = computed_profile(LLAMA31_70B, H100, H100_POWER, tp=8)
+    moe = moe_profile(QWEN3_235B_A22B, H100, H100_POWER, tp=8)
+    adv8 = moe.tok_per_watt(8, 8192) / dense.tok_per_watt(8, 8192)
+    adv1 = moe.tokens_per_s(1, 8192) / dense.tokens_per_s(1, 8192)
+    return rows, (f"qwen3_vs_70b: {adv1:.1f}x at n=1 (W-ratio bound), "
+                  f"{adv8:.1f}x at n=8; collapses at n_max (KV-bound) — "
+                  "paper's 5.1x cell uses sub-idle power, see EXPERIMENTS")

@@ -1,0 +1,38 @@
+"""Table 4: context-window routing vs semantic routing per-pool tok/W
+(H100, rho = 0.85)."""
+from repro.core import H100_LLAMA70B, computed_profile
+from repro.core.hardware import H100
+from repro.core.modelspec import LLAMA31_8B
+from repro.core.power import H100_POWER
+
+PAPER = {  # pool -> (n_active, P_W, tok/W)
+    "context-short-70B@8K": (109, 578, 8.77),
+    "context-long-70B@64K": (14, 413, 1.52),
+    "semantic-small-8B@8K": (49, 506, 6.24),
+    "semantic-large-70B@64K": (14, 413, 1.52),
+}
+RHO = 0.85
+
+
+def run():
+    prof8b = computed_profile(LLAMA31_8B, H100, H100_POWER, tp=1)
+    pools = [
+        ("context-short-70B@8K", H100_LLAMA70B, 8192),
+        ("context-long-70B@64K", H100_LLAMA70B, 65536),
+        ("semantic-small-8B@8K", prof8b, 8192),
+        ("semantic-large-70B@64K", H100_LLAMA70B, 65536),
+    ]
+    rows = []
+    for name, prof, window in pools:
+        n_act = RHO * prof.n_max(window)
+        p = prof.power_w(n_act)
+        tpw = prof.tok_per_watt(n_act, window)
+        pn, pp, pt = PAPER[name]
+        rows.append(dict(pool=name, n_active=round(n_act, 0),
+                         n_active_paper=pn,
+                         power_w=round(p, 0), power_w_paper=pp,
+                         tok_per_watt=round(tpw, 2),
+                         tok_per_watt_paper=pt,
+                         delta_pct=round(100 * (tpw / pt - 1), 0)))
+    long_tie = abs(rows[1]["tok_per_watt"] - rows[3]["tok_per_watt"]) < 1e-9
+    return rows, f"long_pool_tie={long_tie} (paper: both 1.52)"

@@ -1,0 +1,31 @@
+"""Table 5: GPU generation comparison (70B @ 8K) + tok/$M."""
+from repro.core.profiles import GENERATION_PROFILES
+from repro.core.tokenomics import tok_per_dollar_m
+
+PAPER = {  # gpu -> (n_max@8K, tok/W, tok/$M)
+    "H100-SXM5": (22, 7.41, 0.30), "H200-SXM": (44, 15.58, 0.49),
+    "B200-SXM": (58, 20.93, 0.73), "GB200-NVL": (65, 18.49, 0.63),
+}
+# NOTE: the paper's Table 5 n_max uses the *replicated-KV* ComputedProfile
+# (22 @ 8K) while its tok/W column matches the calibrated profiles'
+# throughput at saturation; we report our calibrated profiles and flag the
+# divergence (DESIGN.md §4).
+
+
+def run():
+    rows = []
+    for name, prof in GENERATION_PROFILES.items():
+        tpw = prof.tok_per_watt_at_window(8192)
+        row = dict(gpu=name, tdp_w=prof.chip.tdp_w,
+                   p_idle_w=prof.power_model.p_idle_w,
+                   w_ms=round(prof.roofline.w_ms, 2),
+                   n_max_8k=prof.n_max(8192),
+                   tok_per_watt=round(tpw, 2),
+                   tok_per_dollar_m=round(tok_per_dollar_m(prof, 8192), 2))
+        if name in PAPER:
+            row["tok_per_watt_paper"] = PAPER[name][1]
+        rows.append(row)
+    tpw = {r["gpu"]: r["tok_per_watt"] for r in rows}
+    order_ok = (tpw["B200-SXM"] > tpw["H200-SXM"] > tpw["H100-SXM5"]
+                and tpw["GB200-NVL"] < tpw["B200-SXM"])
+    return rows, f"paper_ordering_reproduced={order_ok} (incl. GB200 dip)"

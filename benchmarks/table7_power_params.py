@@ -1,0 +1,30 @@
+"""Appendix A Table 7: power model parameters (+ the x0 = log2(W/H0)
+roofline consistency check)."""
+import math
+
+from repro.core.power import POWER_MODELS
+from repro.core.profiles import GENERATION_PROFILES
+
+PAPER = {  # gpu -> (tdp, p_idle, p_nom, k, x0)
+    "H100-SXM5": (700, 300, 600, 1.0, 4.2),
+    "H200-SXM": (700, 300, 600, 1.0, 5.5),
+    "B200-SXM": (1000, 430, 860, 1.0, 6.8),
+    "GB200-NVL": (1200, 516, 1032, 1.0, 6.8),
+}
+
+
+def run():
+    rows = []
+    for name, pm in POWER_MODELS.items():
+        row = dict(gpu=name, p_idle_w=pm.p_idle_w, p_nom_w=pm.p_nom_w,
+                   k=pm.k, x0=pm.x0, quality=pm.quality)
+        if name in PAPER:
+            row["x0_paper"] = PAPER[name][4]
+        prof = GENERATION_PROFILES.get(name)
+        if prof:
+            # Appendix A footnote: x0 = log2(W / H0)
+            row["x0_from_roofline"] = round(
+                math.log2(prof.roofline.w_ms / prof.roofline.h0_ms), 2)
+        rows.append(row)
+    return rows, ("B200 x0: Table-1-consistent 4.45 used; Appendix-A lists "
+                  "6.8 (paper-internal inconsistency, see EXPERIMENTS.md)")

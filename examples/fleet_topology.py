@@ -1,0 +1,60 @@
+"""Fleet topology design space (paper Tables 3-6).
+
+Evaluates Homo / Pool / FleetOpt on H100 & B200 over all three workload
+archetypes, decomposes topology x generation gains (§4.2), compares
+semantic vs context routing (§5.1), and sweeps quantization (§5.2).
+
+  PYTHONPATH=src python examples/fleet_topology.py
+"""
+from repro.core import (AGENT, AZURE, LMSYS, B200_LLAMA70B_FLEET,
+                        H100_LLAMA70B, FleetOpt, Homogeneous, Semantic,
+                        TwoPool, computed_profile, gain_decomposition,
+                        optimize_gamma)
+from repro.core.hardware import H100
+from repro.core.modelspec import LLAMA31_8B, LLAMA31_70B
+from repro.core.power import H100_POWER
+
+
+def main():
+    tpw = {}
+    print("=== Table 3: fleet tok/W ===")
+    for wl, bs in ((AZURE, 4096), (LMSYS, 1536), (AGENT, 8192)):
+        for gname, prof in (("H100", H100_LLAMA70B),
+                            ("B200", B200_LLAMA70B_FLEET)):
+            row = {}
+            for tname, topo in (
+                    ("homo", Homogeneous()), ("pool", TwoPool(b_short=bs)),
+                    ("fleetopt", FleetOpt(b_short=bs, gamma=2.0))):
+                rep = topo.provision(wl, prof, LLAMA31_70B)
+                row[tname] = rep
+            if wl is AZURE:
+                tpw[gname] = {t: r.tok_per_watt for t, r in row.items()}
+            cells = " | ".join(
+                f"{t}: {r.instances:>3} inst {r.tok_per_watt:5.2f} tok/W"
+                for t, r in row.items())
+            print(f"{wl.name:12s} {gname}: {cells}")
+
+    print("\n=== §4.2 gain decomposition (Azure) ===")
+    for k, v in gain_decomposition(tpw).items():
+        print(f"  {k:20s} {v:.2f}")
+
+    print("\n=== gamma* optimization ===")
+    g, rep = optimize_gamma(AZURE, H100_LLAMA70B, LLAMA31_70B, 4096)
+    print(f"  gamma* = {g}, fleet tok/W = {rep.tok_per_watt:.2f} "
+          f"(paper: gamma* = 2)")
+
+    print("\n=== §5.1 semantic vs context routing ===")
+    prof8b = computed_profile(LLAMA31_8B, H100, H100_POWER, tp=1)
+    sem = Semantic(b_short=4096, small_profile=prof8b,
+                   small_model=LLAMA31_8B).provision(
+        AZURE, H100_LLAMA70B, LLAMA31_70B)
+    ctx = FleetOpt(b_short=4096, gamma=2.0).provision(
+        AZURE, H100_LLAMA70B, LLAMA31_70B)
+    print(f"  context routing : {ctx.tok_per_watt:.2f} tok/W "
+          f"({ctx.instances} instances)")
+    print(f"  semantic routing: {sem.tok_per_watt:.2f} tok/W "
+          f"({sem.instances} instances; quality question, not tok/W — §5.1)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""End-to-end serving driver (the paper is a serving paper, so this is the
+deliverable-b e2e example): a real reduced model served with batched
+requests through context-length-routed pools, energy metered per decode
+iteration, comparing homogeneous vs FleetOpt routing.
+
+  PYTHONPATH=src python examples/serve_demo.py
+"""
+import subprocess
+import sys
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+if __name__ == "__main__":
+    sys.exit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "yi-6b",
+         "--requests", "24"],
+        env={"PYTHONPATH": str(ROOT / "src"),
+             **__import__("os").environ}))

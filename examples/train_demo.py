@@ -1,0 +1,20 @@
+"""Training driver example: train a small decoder on the synthetic Markov
+corpus and watch the loss drop (use --preset 100m --steps 300 for the
+full-scale run; the default is CPU-demo sized).
+
+  PYTHONPATH=src python examples/train_demo.py [--preset 100m --steps 300]
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+if __name__ == "__main__":
+    args = sys.argv[1:] or ["--preset", "10m", "--steps", "60",
+                            "--batch", "4", "--seq", "64"]
+    sys.exit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "yi-6b",
+         *args],
+        env={"PYTHONPATH": str(ROOT / "src"), **os.environ}))

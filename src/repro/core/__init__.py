@@ -1,0 +1,39 @@
+"""repro.core — the paper's analytical contribution.
+
+Public API surface (see DESIGN.md §2):
+  hardware   — ChipSpec constants (H100/H200/B200/GB200 + TPU v5e)
+  power      — logistic P(b) model (Eq. 1, Table 7)
+  roofline   — decode latency tau = W + H(L) n (§2.2)
+  kvcache    — kappa / n_max helpers (Eq. 3)
+  modelspec  — analytical model geometry (Table 2 models)
+  profiles   — GpuProfile protocol, ManualProfile, computed_profile
+  tokenomics — Eq. 2 / Eq. 4 + Table-1 context sweep
+  workloads  — Azure / LMSYS / agent trace reconstructions
+  fleet      — Little's-law fleet sizing
+  routing    — Homo / TwoPool / FleetOpt / Semantic topologies
+  law        — 1/W-law fits + gain decomposition
+  moe        — active-parameter streaming + dispatch sensitivity
+  analyzer   — fleet_tpw_analysis (Appendix B API)
+"""
+from . import (adaptive, analyzer, carbon, disagg, fleet, hardware, kvcache,
+               law, modelspec, moe, multipool, power, profiles, roofline,
+               routing, speculative, tokenomics, workloads)
+from .adaptive import AdaptiveController
+from .carbon import GRIDS, EnergyBill, GridProfile, bill
+from .disagg import Disaggregated
+from .multipool import MultiPool, sweep_pool_counts
+from .speculative import speculative_tok_per_watt
+from .analyzer import FleetAnalysis, fleet_tpw_analysis
+from .hardware import B200, GB200, H100, H200, TPU_V5E, ChipSpec
+from .law import fit_one_over_w, gain_decomposition
+from .modelspec import ModelSpec
+from .power import PowerModel
+from .profiles import (B200_LLAMA70B, B200_LLAMA70B_FLEET, GB200_LLAMA70B,
+                       H100_LLAMA70B, H200_LLAMA70B, V5E_LLAMA70B, BaseProfile,
+                       GpuProfile, ManualProfile, computed_profile)
+from .roofline import DecodeRoofline
+from .routing import FleetOpt, Homogeneous, Semantic, TwoPool, optimize_gamma
+from .tokenomics import context_sweep, fleet_tok_per_watt, single_gpu_tok_per_watt
+from .workloads import AGENT, AZURE, LMSYS, WORKLOADS, Workload
+
+__all__ = [n for n in dir() if not n.startswith("_")]

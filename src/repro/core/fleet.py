@@ -1,0 +1,126 @@
+"""Fleet sizing & fleet-level tok/W (paper §4, Eq. 4).
+
+Sizing model (documented; FleetOpt internals are unpublished, see DESIGN.md §4):
+
+  decode bound  — Little's law on the decode phase: the steady-state
+                  in-flight population is N = lambda_i * Lbar_out * tau(n_max,
+                  Lbar_ctx); instances = ceil(N / n_max).
+  prefill bound — P99 TTFT <= 500 ms forces enough aggregate prefill
+                  throughput: tokens/s_prefill = tp * peak_flops * mfu /
+                  (2 * streamed_params).  Chunked prefill piggybacks on
+                  memory-bound decode iterations, captured by `prefill_mfu`.
+  no-overflow penalty — plain two-pool routing (no FleetOpt overflow /
+                  compression) suffers conservative admission and
+                  head-of-line blocking of long prefills in the long pool;
+                  modeled as a long-pool occupancy inflation factor
+                  `hol_inflation` (calibrated against Table 3; = 1.0 for
+                  Homo and FleetOpt).
+
+Power per instance is evaluated at the operating concurrency
+n_act = min(N / instances, rho_op * n_max), rho_op = 0.85 (§5.1 uses the same
+utilization).  "Instance" = one TP group (the paper's per-"GPU" power rows
+are per TP-8 instance; see EXPERIMENTS.md §Claims).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional
+
+from .profiles import BaseProfile
+
+RHO_OP = 0.85           # operating utilization for the power term
+# Effective prefill MFU (chunked prefill piggybacks on memory-bound decode
+# iterations, so the achievable fraction of peak is high).  Calibrated
+# jointly with HOL_INFLATION against Table 3 (see EXPERIMENTS.md §Claims).
+PREFILL_MFU = 0.8
+
+
+@dataclasses.dataclass
+class PoolSizing:
+    """One provisioned pool of identical instances."""
+
+    name: str
+    window: int
+    profile: BaseProfile
+    arrival_rate: float          # requests/s routed here
+    mean_output: float           # tokens
+    mean_context: float          # mean KV length during decode
+    mean_prompt: float           # tokens (prefill load)
+    hol_inflation: float = 1.0
+    # computed:
+    instances: int = 0
+    n_active: float = 0.0
+    power_w_per_instance: float = 0.0
+    tokens_per_s: float = 0.0
+    decode_bound: int = 0
+    prefill_bound: int = 0
+
+    def size(self, *, streamed_params: float,
+             prefill_mfu: Optional[float] = None) -> "PoolSizing":
+        if prefill_mfu is None:
+            prefill_mfu = PREFILL_MFU  # read at call time (calibratable)
+        prof = self.profile
+        nmax = prof.n_max(self.window)
+        tau_s = prof.roofline.tau_ms(nmax, self.mean_context) * 1e-3
+        n_inflight = self.arrival_rate * self.mean_output * tau_s \
+            * self.hol_inflation
+        self.decode_bound = math.ceil(n_inflight / nmax) if n_inflight else 0
+        # prefill capacity per instance (tokens/s)
+        prefill_tput = (prof.tp * prof.chip.peak_bf16_flops * prefill_mfu
+                        / (2.0 * streamed_params))
+        prefill_load = self.arrival_rate * self.mean_prompt * self.hol_inflation
+        self.prefill_bound = math.ceil(prefill_load / prefill_tput) \
+            if prefill_load else 0
+        self.instances = max(self.decode_bound, self.prefill_bound, 0)
+        if self.arrival_rate > 0:
+            self.instances = max(self.instances, 1)
+        if self.instances:
+            self.n_active = min(n_inflight / self.instances, RHO_OP * nmax)
+            self.power_w_per_instance = prof.power_w(self.n_active)
+            self.tokens_per_s = self.arrival_rate * self.mean_output
+        return self
+
+
+@dataclasses.dataclass
+class FleetReport:
+    """Eq. 4 fleet-level result."""
+
+    pools: List[PoolSizing]
+    label: str = ""
+
+    @property
+    def instances(self) -> int:
+        return sum(p.instances for p in self.pools)
+
+    @property
+    def gpus(self) -> int:
+        return sum(p.instances * p.profile.tp for p in self.pools)
+
+    @property
+    def power_kw(self) -> float:
+        return sum(p.instances * p.power_w_per_instance
+                   for p in self.pools) / 1e3
+
+    @property
+    def tokens_per_s(self) -> float:
+        return sum(p.tokens_per_s for p in self.pools)
+
+    @property
+    def tok_per_watt(self) -> float:
+        pw = self.power_kw * 1e3
+        return self.tokens_per_s / pw if pw else 0.0
+
+    def row(self) -> dict:
+        return dict(label=self.label, instances=self.instances,
+                    gpus=self.gpus, kw=round(self.power_kw, 1),
+                    tok_per_watt=round(self.tok_per_watt, 2))
+
+
+def size_fleet(pools: List[PoolSizing], *, streamed_params: float,
+               prefill_mfu: Optional[float] = None,
+               label: str = "") -> FleetReport:
+    for p in pools:
+        p.size(streamed_params=streamed_params, prefill_mfu=prefill_mfu)
+    return FleetReport(pools=[p for p in pools if p.arrival_rate > 0],
+                       label=label)

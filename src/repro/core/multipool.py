@@ -1,0 +1,67 @@
+"""Beyond-paper: K >= 3 context-window pools (paper §10.3 future work).
+
+"The multiplicative gain structure suggests that finer-grained topologies
+could compound further efficiency improvements, but this is not analyzed
+here."  — we analyze it.  A K-pool topology partitions traffic by
+predicted total into K geometric windows; each pool gets FleetOpt-style
+overflow headroom (route at w/gamma, serve at w).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from .fleet import FleetReport, PoolSizing, size_fleet
+from .modelspec import ModelSpec
+from .profiles import BaseProfile
+from .routing import _subset_stats
+from .workloads import Workload
+
+
+@dataclasses.dataclass
+class MultiPool:
+    """Pools at `windows` (ascending); requests go to the smallest window
+    whose admission boundary (window / gamma) covers their predicted
+    total."""
+
+    windows: Sequence[int]
+    gamma: float = 2.0
+
+    def provision(self, workload: Workload, profile: BaseProfile,
+                  model: ModelSpec) -> FleetReport:
+        p, o = workload.prompts, workload.outputs
+        lam = workload.arrival_rate
+        predicted = p + workload.mean_output
+        pools: List[PoolSizing] = []
+        assigned = np.zeros(p.shape, bool)
+        for i, w in enumerate(self.windows):
+            boundary = w / self.gamma if i < len(self.windows) - 1 else w
+            mask = ~assigned & (predicted <= boundary)
+            if i == len(self.windows) - 1:   # largest pool takes the rest
+                mask = ~assigned
+            assigned |= mask
+            s = _subset_stats(p, o, mask)
+            pools.append(PoolSizing(
+                name=f"pool-{w // 1024}K", window=int(w), profile=profile,
+                arrival_rate=lam * s["frac"],
+                mean_output=s["mean_output"],
+                mean_context=s["mean_context"],
+                mean_prompt=s["mean_prompt"]))
+        return size_fleet(pools, streamed_params=model.streamed_params,
+                          label=f"MultiPool{list(self.windows)}")
+
+
+def sweep_pool_counts(workload: Workload, profile: BaseProfile,
+                      model: ModelSpec, *, max_window: int = 65536,
+                      ) -> List[Tuple[int, float]]:
+    """Fleet tok/W vs number of pools (geometric window ladder)."""
+    out = []
+    for k in (1, 2, 3, 4, 5):
+        # geometric ladder ending at max_window
+        windows = [max_window // (4 ** (k - 1 - i)) for i in range(k)]
+        windows = [max(w, 2048) for w in windows]
+        rep = MultiPool(windows=windows).provision(workload, profile, model)
+        out.append((k, rep.tok_per_watt))
+    return out

@@ -1,0 +1,18 @@
+"""TPU Pallas kernels for the paper's compute hot spots.
+
+flash_decode — blocked GQA decode attention (the H(L)*n KV-scan term of the
+               paper's decode roofline, §2.2);
+mamba_scan   — chunked SSD scan (Mamba2 prefill/train path);
+wkv6         — chunked RWKV6 data-dependent-decay recurrence.
+
+Each kernel ships with ops.py (backend dispatch) and ref.py (naive
+sequential pure-jnp oracle); see tests/kernels for shape/dtype sweeps.
+"""
+from . import ops, ref
+from .flash_decode import flash_decode
+from .flash_decode_int8 import flash_decode_int8, quantize_kv
+from .mamba_scan import mamba_scan
+from .wkv6 import wkv6
+
+__all__ = ["ops", "ref", "flash_decode", "flash_decode_int8", "quantize_kv",
+           "mamba_scan", "wkv6"]

@@ -1,0 +1,96 @@
+"""Pallas TPU chunked-SSD scan (Mamba2) — recurrent-state hot path.
+
+TPU adaptation of the GPU SSD algorithm: instead of warp-level scans, the
+chunk dimension is the innermost *sequential* grid axis with the (hd, ds)
+state carried in VMEM scratch; intra-chunk work is two MXU matmuls
+((Lc x Lc) decay-masked attention-like product and the state outer-product
+update).  Chunk length and head dim are chosen so tiles are (8,128)-aligned.
+grid = (batch, heads, chunks).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+
+
+def _mamba_kernel(xt_ref, b_ref, c_ref, la_ref, y_ref, fin_ref, st_ref,
+                  *, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        st_ref[...] = jnp.zeros_like(st_ref)
+
+    xt = xt_ref[0, :, 0].astype(jnp.float32)       # (Lc, hd)
+    bm = b_ref[0].astype(jnp.float32)              # (Lc, ds)
+    cm = c_ref[0].astype(jnp.float32)              # (Lc, ds)
+    la = la_ref[0, :, 0].astype(jnp.float32)       # (Lc,)
+    state = st_ref[...]                            # (hd, ds)
+
+    cs = jnp.cumsum(la)                            # inclusive
+    Lc = xt.shape[0]
+    diff = cs[:, None] - cs[None, :]               # (q, t)
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (Lc, Lc), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (Lc, Lc), 1))
+    G = jnp.where(tri, jnp.exp(jnp.where(tri, diff, 0.0)), 0.0)
+    att = jnp.dot(cm, bm.T) * G                    # (q, t)
+    y_intra = jnp.dot(att, xt)                     # (q, hd)
+    y_inter = jnp.exp(cs)[:, None] * jnp.dot(cm, state.T)
+    y_ref[0, :, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    dec = jnp.exp(cs[-1] - cs)[:, None]            # (t, 1)
+    st_new = state * jnp.exp(cs[-1]) + jnp.dot((dec * xt).T, bm)
+    st_ref[...] = st_new
+
+    @pl.when(ci == n_chunks - 1)
+    def _finish():
+        fin_ref[0, 0] = st_new.astype(fin_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mamba_scan(xt: jax.Array, Bm: jax.Array, Cm: jax.Array, lA: jax.Array,
+               *, chunk: int = DEFAULT_CHUNK, interpret: bool = True):
+    """Chunked SSD scan.
+
+    xt: (B,S,nh,hd) dt-scaled inputs; Bm/Cm: (B,S,ds); lA: (B,S,nh).
+    Returns (y (B,S,nh,hd), final_state (B,nh,hd,ds)).
+    """
+    B, S, nh, hd = xt.shape
+    ds = Bm.shape[-1]
+    Lc = min(chunk, S)
+    n_chunks = -(-S // Lc)
+    pad = n_chunks * Lc - S
+    if pad:
+        xt = jnp.pad(xt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        lA = jnp.pad(lA, ((0, 0), (0, pad), (0, 0)))
+
+    kernel = functools.partial(_mamba_kernel, n_chunks=n_chunks)
+    y, fin = pl.pallas_call(
+        kernel,
+        grid=(B, nh, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, Lc, 1, hd), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, Lc, ds), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, Lc, ds), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, Lc, 1), lambda b, h, c: (b, c, h)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Lc, 1, hd), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, hd, ds), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n_chunks * Lc, nh, hd), xt.dtype),
+            jax.ShapeDtypeStruct((B, nh, hd, ds), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, ds), jnp.float32)],
+        interpret=interpret,
+    )(xt, Bm, Cm, lA)
+    return y[:, :S], fin

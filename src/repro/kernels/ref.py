@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are deliberately *naive* (direct softmax, sequential one-step scans):
+slow, obviously-correct references.  The chunked jnp implementations in
+repro.models.{attention,ssm} and the Pallas kernels are both validated
+against these in tests/kernels/.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array) -> jax.Array:
+    """Decode GQA attention, direct softmax.
+
+    q: (B, H, D) one query per sequence; k, v: (B, T, K, D);
+    lengths: (B,) valid cache entries.  Returns (B, H, D).
+    """
+    B, H, D = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qh = q.reshape(B, K, G, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qh, k.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    valid = jnp.arange(T)[None] < lengths[:, None]            # (B, T)
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, D)
+
+
+def mamba_scan_ref(xt: jax.Array, Bm: jax.Array, Cm: jax.Array,
+                   lA: jax.Array, init_state=None):
+    """Sequential SSD scan (one step per token).
+
+    xt: (B,S,nh,hd) dt-scaled inputs; Bm/Cm: (B,S,ds); lA: (B,S,nh) log-decay.
+    Returns (y (B,S,nh,hd), final_state (B,nh,hd,ds)).
+    """
+    B, S, nh, hd = xt.shape
+    ds = Bm.shape[-1]
+    s0 = (init_state if init_state is not None
+          else jnp.zeros((B, nh, hd, ds), jnp.float32))
+
+    def step(state, inp):
+        x_t, b_t, c_t, la_t = inp
+        state = state * jnp.exp(la_t)[:, :, None, None] \
+            + jnp.einsum("bnp,bs->bnps", x_t, b_t)
+        y_t = jnp.einsum("bnps,bs->bnp", state, c_t)
+        return state, y_t
+
+    xs = (xt.transpose(1, 0, 2, 3), Bm.transpose(1, 0, 2),
+          Cm.transpose(1, 0, 2), lA.transpose(1, 0, 2))
+    state, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), state
+
+
+def wkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+             u: jax.Array, init_state=None):
+    """Sequential RWKV6 recurrence.
+
+    r,k,v,w: (B,S,H,hd); u: (H,hd).  Returns (out (B,S,H,hd),
+    final_state (B,H,hd,hd)).
+    """
+    B, S, H, hd = r.shape
+    s0 = (init_state if init_state is not None
+          else jnp.zeros((B, H, hd, hd), jnp.float32))
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp
+        out = jnp.einsum("bhd,bhde->bhe", r_t, state) \
+            + jnp.einsum("bhd,bhd->bh", r_t, u[None] * k_t)[..., None] * v_t
+        state = state * w_t[..., None] \
+            + jnp.einsum("bhd,bhe->bhde", k_t, v_t)
+        return state, out
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, w))
+    state, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), state

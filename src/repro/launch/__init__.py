@@ -1,0 +1,11 @@
+"""Launch layer: production mesh, sharding rules, input shapes, dry-run,
+train/serve drivers.  NOTE: import repro.launch.dryrun only in a fresh
+process — it sets XLA_FLAGS for 512 host devices at import time.
+"""
+from . import hlo_analysis, mesh, shapes, sharding  # noqa: F401
+from .mesh import data_axes, make_local_mesh, make_production_mesh
+from .shapes import SHAPES, InputShape, applicability, input_specs
+
+__all__ = ["hlo_analysis", "mesh", "shapes", "sharding", "data_axes",
+           "make_local_mesh", "make_production_mesh", "SHAPES", "InputShape",
+           "applicability", "input_specs"]

@@ -1,0 +1,291 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh).
+
+This proves the distribution config is coherent without hardware: a
+sharding mismatch, compile-time OOM, or unsupported collective is a bug.
+Results (memory_analysis, cost_analysis, collective schedule, roofline
+terms) are written to benchmarks/results/dryrun/*.json and consumed by
+EXPERIMENTS.md §Dry-run/§Roofline and the perf loop.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape decode_32k
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.launch import hlo_analysis
+from repro.launch.mesh import data_axes, make_production_mesh
+from repro.launch.shapes import SHAPES, applicability, input_specs
+from repro.launch.sharding import (batch_specs, cache_specs, param_specs,
+                                   pure_dp, to_shardings)
+from repro.models import model as M
+from repro.training.optimizer import AdamW
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] \
+    / "benchmarks" / "results" / "dryrun"
+
+
+def _shaped(tree, shardings):
+    """Attach shardings to a ShapeDtypeStruct tree."""
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree, shardings)
+
+
+def build_step(arch: str, shape_name: str, mesh, cfg=None):
+    """Returns (step_fn, example_args_abstract, donate) for one pair."""
+    cfg = cfg if cfg is not None else get_config(arch)
+    shape = SHAPES[shape_name]
+    skip = applicability(cfg, shape)
+    if skip:
+        raise SkipPair(skip)
+    dp = data_axes(mesh)
+    pspecs = param_specs(cfg, jax.eval_shape(
+        lambda: M.init_params(jax.random.PRNGKey(0), cfg)), mesh,
+        mode="train" if shape.kind == "train" else "serve")
+    pshard = to_shardings(pspecs, mesh)
+    params_abs = _shaped(jax.eval_shape(
+        lambda: M.init_params(jax.random.PRNGKey(0), cfg)), pshard)
+    specs = input_specs(cfg, shape)
+    wide = shape.kind == "train" and pure_dp(cfg, mesh)
+    from repro.models import common as MC
+    MC.BATCH_AXES_OVERRIDE = (("pod", "data", "model") if wide else None)
+    # sequence-parallel residuals for large-model training (§Perf D3)
+    M.SEQ_SHARD_RESIDUAL = (shape.kind == "train"
+                            and cfg.param_count() > 3e10)
+    bspec = batch_specs(mesh, shape.global_batch, wide=wide)
+
+    def shard_tok(t):
+        return jax.ShapeDtypeStruct(
+            t.shape, t.dtype, sharding=NamedSharding(mesh, P(*(
+                [bspec[0] if bspec else None]
+                + [None] * (len(t.shape) - 1)))))
+
+    if shape.kind == "train":
+        opt = AdamW(total_steps=1000)
+        opt_abs_raw = jax.eval_shape(
+            lambda p: opt.init(p), jax.eval_shape(
+                lambda: M.init_params(jax.random.PRNGKey(0), cfg)))
+        ospec = type(opt_abs_raw)(step=P(),
+                                  mu=pspecs, nu=pspecs)
+        oshard = to_shardings(ospec, mesh)
+        opt_abs = _shaped(opt_abs_raw, oshard)
+        batch_abs = {k: shard_tok(v) for k, v in specs.items()}
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: M.loss_fn(p, cfg, batch, remat=True))(params)
+            new_params, new_opt = opt.update(grads, opt_state, params)
+            return new_params, new_opt, loss
+
+        fn = jax.jit(train_step,
+                     out_shardings=(pshard, oshard,
+                                    NamedSharding(mesh, P())),
+                     donate_argnums=(0, 1))
+        return fn, (params_abs, opt_abs, batch_abs)
+
+    if shape.kind == "prefill":
+        batch_abs = {k: shard_tok(v) for k, v in specs.items()}
+
+        def prefill_step(params, batch):
+            logits, cache, _ = M.forward(params, cfg, batch, mode="prefill")
+            return logits, cache
+
+        cshape = jax.eval_shape(
+            lambda p, b: prefill_step(p, b)[1], params_abs, batch_abs)
+        cshard = to_shardings(
+            cache_specs(cfg, cshape, mesh, batch=shape.global_batch), mesh)
+        fn = jax.jit(prefill_step,
+                     out_shardings=(NamedSharding(mesh, P(bspec[0] if bspec
+                                                          else None)),
+                                    cshard))
+        return fn, (params_abs, batch_abs)
+
+    # decode / serve_step
+    cshard = to_shardings(
+        cache_specs(cfg, specs["cache"], mesh, batch=shape.global_batch),
+        mesh)
+    cache_abs = _shaped(specs["cache"], cshard)
+    tok_abs = shard_tok(specs["tokens"])
+    pos_abs = shard_tok(specs["pos"])
+
+    def serve_step(params, tokens, cache, pos):
+        logits, new_cache = M.decode_step(params, cfg, tokens, cache, pos)
+        return logits, new_cache
+
+    fn = jax.jit(serve_step,
+                 out_shardings=(NamedSharding(mesh, P(bspec[0] if bspec
+                                                      else None)),
+                                cshard),
+                 donate_argnums=(2,))
+    return fn, (params_abs, tok_abs, cache_abs, pos_abs)
+
+
+class SkipPair(Exception):
+    pass
+
+
+def _cost_vector(compiled) -> dict:
+    cost = compiled.cost_analysis() or {}
+    coll = hlo_analysis.collective_bytes(compiled.as_text())
+    return dict(flops=float(cost.get("flops", 0.0)),
+                bytes_accessed=float(cost.get("bytes accessed", 0.0)),
+                transcendentals=float(cost.get("transcendentals", 0.0)),
+                collectives=coll)
+
+
+def _extrapolate(c1: dict, c2: dict, repeats: int) -> dict:
+    """XLA's HloCostAnalysis counts a while-loop body ONCE regardless of
+    trip count, so a scanned layer stack under-reports by ~n_repeat.  We
+    compile n_repeat=1 and n_repeat=2 variants and extrapolate
+    cost(R) = cost(1) + (R-1) * (cost(2) - cost(1)) — exact for costs
+    affine in the repeat count (all of ours are)."""
+    out = {}
+    for k in ("flops", "bytes_accessed", "transcendentals"):
+        d = c2[k] - c1[k]
+        out[k] = c1[k] + (repeats - 1) * d
+    out["collectives"] = {
+        k: int(c1["collectives"][k]
+               + (repeats - 1) * (c2["collectives"][k]
+                                  - c1["collectives"][k]))
+        for k in c1["collectives"]}
+    return out
+
+
+def _corrected_cost(arch: str, shape_name: str, mesh, cfg) -> dict:
+    import contextlib
+    import dataclasses
+
+    @contextlib.contextmanager
+    def unrolled():
+        old = M.SCAN_UNROLL
+        M.SCAN_UNROLL = True   # no while loop -> every repeat is counted
+        try:
+            yield
+        finally:
+            M.SCAN_UNROLL = old
+
+    costs = []
+    with unrolled():
+        for k in (1, 2):
+            enc = (dataclasses.replace(cfg.encoder, n_layers=k)
+                   if cfg.encoder is not None else None)
+            cfg_k = dataclasses.replace(cfg, n_repeat=k, encoder=enc)
+            fn, args = build_step(arch, shape_name, mesh, cfg=cfg_k)
+            costs.append(_cost_vector(fn.lower(*args).compile()))
+    # NOTE: whisper's encoder (24L) scales with the same factor as its
+    # decoder n_repeat (24), so one extrapolation covers both stacks.
+    return _extrapolate(costs[0], costs[1], cfg.n_repeat)
+
+
+def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+             save: bool = True) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    label = f"{arch}_{shape_name}_{mesh_name}"
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        with jax.sharding.set_mesh(mesh):   # ambient mesh for constrain()
+            cfg = get_config(arch)
+            fn, args = build_step(arch, shape_name, mesh, cfg=cfg)
+            lowered = fn.lower(*args)
+            compiled = lowered.compile()
+            mem = compiled.memory_analysis()
+            raw = _cost_vector(compiled)
+            # trip-count correction (see _extrapolate): two small compiles
+            cost = _corrected_cost(arch, shape_name, mesh, cfg)
+        terms = hlo_analysis.roofline_from_counts(
+            cost["flops"], cost["bytes_accessed"], cost["collectives"])
+        result = dict(
+            arch=arch, shape=shape_name, mesh=mesh_name, status="ok",
+            compile_s=round(time.time() - t0, 1),
+            bytes_per_device=dict(
+                arguments=mem.argument_size_in_bytes,
+                outputs=mem.output_size_in_bytes,
+                temps=mem.temp_size_in_bytes,
+                aliased=mem.alias_size_in_bytes,
+                peak_estimate=mem.argument_size_in_bytes
+                + mem.temp_size_in_bytes + mem.output_size_in_bytes
+                - mem.alias_size_in_bytes,
+            ),
+            cost=dict(flops=cost["flops"],
+                      bytes_accessed=cost["bytes_accessed"],
+                      transcendentals=cost["transcendentals"],
+                      scan_body_raw=raw),
+            roofline=terms.row(),
+            collectives=cost["collectives"],
+        )
+    except SkipPair as e:
+        result = dict(arch=arch, shape=shape_name, mesh=mesh_name,
+                      status="skip", reason=str(e))
+    except Exception as e:  # a failure here is a bug in the system
+        result = dict(arch=arch, shape=shape_name, mesh=mesh_name,
+                      status="fail", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-2000:])
+    if save:
+        RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+        (RESULTS_DIR / f"{label}.json").write_text(
+            json.dumps(result, indent=1))
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--swa-variants", action="store_true",
+                    help="also run -swa variants for long_500k-skipped archs")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    pairs = []
+    if args.all:
+        for a in list_archs():
+            for s in SHAPES:
+                pairs.append((a, s))
+                if args.swa_variants and s == "long_500k":
+                    cfg = get_config(a)
+                    if applicability(cfg, SHAPES[s]) and \
+                            cfg.attn_block_count and not cfg.encoder:
+                        pairs.append((a + "-swa", s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        pairs = [(args.arch, args.shape)]
+
+    for a, s in pairs:
+        mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
+        out = RESULTS_DIR / f"{a}_{s}_{mesh_name}.json"
+        if args.skip_existing and out.exists():
+            prev = json.loads(out.read_text())
+            if prev.get("status") in ("ok", "skip"):
+                print(f"[cached] {a} {s} {mesh_name}: {prev['status']}")
+                continue
+        r = run_pair(a, s, multi_pod=args.multi_pod)
+        line = f"{a} {s} {mesh_name}: {r['status']}"
+        if r["status"] == "ok":
+            bpd = r["bytes_per_device"]["peak_estimate"] / 2**30
+            line += (f" | {r['compile_s']}s | {bpd:.2f} GiB/dev | dominant "
+                     f"{r['roofline']['dominant']}")
+        elif r["status"] == "fail":
+            line += f" | {r['error']}"
+        else:
+            line += f" | {r['reason']}"
+        print(line, flush=True)
+
+
+if __name__ == "__main__":
+    main()

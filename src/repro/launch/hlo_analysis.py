@@ -1,0 +1,123 @@
+"""Compiled-HLO analysis: collective bytes + roofline terms.
+
+collective_bytes is not in cost_analysis(); we parse the compiled HLO text
+and sum the *result* buffer sizes of every collective op (all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute).  Result
+sizes are per-participant, i.e. bytes that cross the interconnect per chip
+per step (all-gather result counts gathered bytes received; all-reduce
+counts the reduced buffer once — a ring all-reduce moves ~2x that, which we
+fold into the ring factor below).
+
+Roofline terms (per the brief; TPU v5e constants from core.hardware):
+  compute    = HLO_FLOPs / peak_FLOPs            (per chip, cost_analysis
+                                                  is already per-device)
+  memory     = HLO_bytes / HBM_bw
+  collective = collective_bytes * ring_factor / ICI_bw
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List
+
+from repro.core.hardware import V5E_HBM_BW, V5E_ICI_BW, V5E_PEAK_FLOPS
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+                "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# result shape of an op line:  %x = bf16[8,128]{1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+(" + "|".join(_COLLECTIVES)
+    + r")")
+# tuple results:  %x = (bf16[8,128]{1,0}, bf16[8,128]{1,0}) all-reduce(
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s+(" + "|".join(_COLLECTIVES) + r")")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind result bytes summed over the module."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if not any(c in line for c in _COLLECTIVES):
+            continue
+        m = _OP_RE.search(line)
+        if m:
+            dtype, dims, kind = m.groups()
+            out[kind] += _shape_bytes(dtype, dims)
+            continue
+        m = _TUPLE_RE.search(line)
+        if m:
+            shapes, kind = m.groups()
+            for dtype, dims in _SHAPE_RE.findall(shapes):
+                out[kind] += _shape_bytes(dtype, dims)
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+# ring factors: bytes actually moved per chip relative to result bytes
+_RING_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float                 # per-chip HLO FLOPs
+    hbm_bytes: float             # per-chip bytes accessed
+    coll_bytes: float            # per-chip interconnect bytes (ring-adjusted)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    per_collective: Dict[str, int]
+
+    def row(self) -> dict:
+        return dict(flops=self.flops, hbm_bytes=self.hbm_bytes,
+                    coll_bytes=self.coll_bytes,
+                    compute_s=self.compute_s, memory_s=self.memory_s,
+                    collective_s=self.collective_s, dominant=self.dominant)
+
+
+def roofline_from_counts(flops: float, hbm_bytes: float,
+                         per_collective: Dict[str, int],
+                         *, peak_flops: float = V5E_PEAK_FLOPS,
+                         hbm_bw: float = V5E_HBM_BW,
+                         ici_bw: float = V5E_ICI_BW) -> "RooflineTerms":
+    """Roofline terms from already-corrected per-chip counts."""
+    adj = sum(per_collective.get(k, 0) * _RING_FACTOR[k]
+              for k in _COLLECTIVES)
+    terms = dict(compute_s=flops / peak_flops, memory_s=hbm_bytes / hbm_bw,
+                 collective_s=adj / ici_bw)
+    dominant = max(terms, key=terms.get)
+    return RooflineTerms(flops=flops, hbm_bytes=hbm_bytes, coll_bytes=adj,
+                         dominant=dominant.replace("_s", ""),
+                         per_collective=dict(per_collective), **terms)
+
+
+def roofline_terms(cost: dict, hlo_text: str,
+                   *, peak_flops: float = V5E_PEAK_FLOPS,
+                   hbm_bw: float = V5E_HBM_BW,
+                   ici_bw: float = V5E_ICI_BW) -> RooflineTerms:
+    coll = collective_bytes(hlo_text)
+    adj = sum(coll[k] * _RING_FACTOR[k] for k in _COLLECTIVES)
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    terms = dict(compute_s=flops / peak_flops, memory_s=hbm / hbm_bw,
+                 collective_s=adj / ici_bw)
+    dominant = max(terms, key=terms.get)
+    return RooflineTerms(flops=flops, hbm_bytes=hbm, coll_bytes=adj,
+                         dominant=dominant.replace("_s", ""),
+                         per_collective=coll, **terms)

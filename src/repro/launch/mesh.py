@@ -1,0 +1,27 @@
+"""Production mesh builders.
+
+Importing this module never touches jax device state; the dry-run entry
+point (dryrun.py) sets XLA_FLAGS before any jax import so the 512 host
+placeholder devices exist when make_mesh is first called.
+"""
+from __future__ import annotations
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(model: int = 1, data: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU demos)."""
+    import jax
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def data_axes(mesh) -> tuple:
+    """The batch-parallel axes of a mesh ('pod' folds into data-parallel)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,216 @@
+"""Sharding rules: parameter/optimizer/cache/batch PartitionSpecs.
+
+Scheme (DESIGN.md §6): 2D tensor parallelism —
+  * `model` axis: attention heads, ffn hidden, experts (when divisible),
+    vocab;
+  * `data` axis: FSDP over the d_model dimension of large matrices + batch;
+  * `pod` axis: pure data parallelism (batch), params replicated per pod.
+
+Rules are name-based over the pytree paths produced by models.model.
+Any dimension that does not divide evenly by its axis falls back to
+replication (checked explicitly — GSPMD would otherwise error).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.spec import ArchConfig
+
+from .mesh import data_axes
+
+
+def _fits(dim: int, mesh, axis) -> bool:
+    if axis is None:
+        return True
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    return dim % size == 0
+
+
+def _spec_for_param(path: str, shape: tuple, cfg: ArchConfig, mesh,
+                    fsdp: Optional[str] = "data") -> P:
+    """Choose a spec by parameter name, then drop non-dividing axes.
+
+    fsdp=None (serving mode) keeps weights model-sharded only: decode is
+    executed every iteration, so FSDP's per-use weight all-gather costs
+    ~params/model_shards bytes of ICI per step — §Perf iteration 1 measured
+    it at 97 % of yi-6b decode_32k's collective term.
+    """
+    name = path.split("/")[-1]
+    stacked = "unit/" in path   # scan-stacked leaves: leading n_repeat axis
+    dims = list(shape[1:]) if stacked else list(shape)
+
+    tp = "model"
+
+    def spec(*ax):
+        ax = list(ax)
+        # pad to rank
+        while len(ax) < len(dims):
+            ax.append(None)
+        # drop axes that don't divide
+        ax = [a if _fits(dims[i], mesh, a) else None
+              for i, a in enumerate(ax)]
+        return P(*([None] + ax if stacked else ax))
+
+    if len(dims) == 0:
+        return P()
+    if name in ("embed",):
+        # vocab replicated, d_model sharded: the token-id gather stays
+        # local.  Sharding vocab on `model` made GSPMD emit a (B,S,d)-sized
+        # masked all-reduce per lookup (§Perf iter 2).
+        return spec(None, tp)
+    if name in ("lm_head",):
+        # vocab on model only: FSDP-sharding d as well makes the CE
+        # backward all-gather the full f32 logits (12 GiB/chip on
+        # granite-moe train_4k) instead of partial-dot + (B,S,d)
+        # all-reduce (§Perf iter 2c).
+        return spec(None, tp)
+    if name in ("wq", "wk", "wv", "w_up", "w_gate", "Wr", "Wk", "Wv", "Wg",
+                "Wk_cm", "Wr_cm", "w_in", "wA"):
+        return spec(fsdp, tp)
+    if name in ("wo", "w_down", "w_out", "Wo", "Wv_cm", "wB"):
+        return spec(tp, fsdp)
+    if name == "router":
+        return spec(fsdp, None)
+    if name in ("conv_w", "conv_b"):
+        return spec(None, tp) if len(dims) == 2 else spec(tp)
+    if name in ("A_log", "dt_bias", "D"):
+        return spec(tp)
+    if name in ("w0", "u"):
+        return spec(tp, None)
+    if name in ("norm_y",):
+        return spec(tp)
+    return spec()  # norms, maa, biases: replicated
+
+
+def _spec_for_moe_param(path: str, shape: tuple, cfg: ArchConfig, mesh,
+                        fsdp: Optional[str] = "data") -> Optional[P]:
+    """MoE expert tensors: expert-parallel when E divides the model axis,
+    otherwise TP inside each expert's ffn dim.
+
+    In the EP case the expert weights are NOT additionally FSDP-sharded:
+    §Perf iteration 2 showed the per-layer data-axis gathers + the
+    d-contraction partial-sum all-reduces dominate granite-moe train_4k's
+    collective term, while EP-only expert storage costs just
+    E/model * 3*d*fe bytes per chip (~6 MB/layer for granite)."""
+    name = path.split("/")[-1]
+    if name not in ("w_gate", "w_up", "w_down") or "_moe" not in path:
+        return None
+    stacked = "unit/" in path
+    E = cfg.n_experts
+    ep = _fits(E, mesh, "model")
+    if name in ("w_gate", "w_up"):          # (E, d, fe)
+        body = P("model", None, None) if ep else P(None, fsdp, "model")
+    else:                                    # (E, fe, d)
+        body = P("model", None, None) if ep else P(None, "model", fsdp)
+    # check remaining dims divide
+    dims = shape[1:] if stacked else shape
+    fixed = []
+    for d_, a in zip(dims, body):
+        fixed.append(a if _fits(d_, mesh, a) else None)
+    return P(*([None] + fixed if stacked else fixed))
+
+
+def param_specs(cfg: ArchConfig, params_shape: Any, mesh,
+                *, mode: str = "train") -> Any:
+    """PartitionSpec pytree matching a (possibly abstract) params tree.
+
+    mode="train": FSDP over `data` + TP over `model` (optimizer state is
+    16x params — sharding it is non-negotiable).
+    mode="serve": TP over `model` only; weights replicated across the
+    data-parallel axis so the per-step FSDP all-gather disappears
+    (§Perf iteration 1).
+
+    Small-model exception (§Perf iteration 3b): under ~8B params the
+    optimizer state fits replicated-per-model-shard (~1 GiB/chip at 1.6B),
+    while FSDP's contraction-dim weight sharding makes GSPMD emit
+    activation-shaped all-gathers/all-reduces around every d x d matmul —
+    5x per RWKV time-mix.  FSDP only pays for itself when param+opt memory
+    actually needs the data axis."""
+    if mode == "train":
+        fsdp = "data" if cfg.param_count() > 8e9 else None
+    else:
+        # serve: drop FSDP only when the TP-sharded weights fit comfortably
+        # replicated per data-rank (2 bytes/param / model-axis); command-r
+        # (13 GiB/chip) and grok (39 GiB/chip) keep FSDP + per-step gather.
+        per_chip = 2.0 * cfg.param_count() / max(mesh.shape.get("model", 1),
+                                                 1)
+        fsdp = None if per_chip < 6e9 else "data"
+    if mode == "train" and pure_dp(cfg, mesh):
+        # §Perf iteration 3d: at <=2-3B params, 16-way TP pays ~12
+        # activation-shaped collectives per layer (every dot_general fwd
+        # + bwd) while the whole param+opt state fits on one chip.  Map
+        # the model axis to extra *data* parallelism instead: weights
+        # replicated, batch sharded 256-way, and the only collective left
+        # is the once-per-step gradient all-reduce.
+        return jax.tree.map(lambda _: P(), params_shape)
+
+    def one(path_elems, leaf):
+        path = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path_elems)
+        moe = _spec_for_moe_param(path, leaf.shape, cfg, mesh, fsdp=fsdp)
+        return moe if moe is not None \
+            else _spec_for_param(path, leaf.shape, cfg, mesh, fsdp=fsdp)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def cache_specs(cfg: ArchConfig, cache_shape: Any, mesh,
+                *, batch: int) -> Any:
+    """Decode-cache specs: batch on data axes; KV heads on model when they
+    divide, else the cache *sequence* dim on model (context parallelism)."""
+    dp = data_axes(mesh)
+    dp_ax = dp if _fits(batch, mesh, dp) else (
+        dp[-1] if _fits(batch, mesh, dp[-1]) else None)
+
+    def one(path_elems, leaf):
+        path = "/".join(str(getattr(p, "key", p)) for p in path_elems)
+        shp = leaf.shape          # leading axis = n_repeat
+        if "wkv" in path or "ssm" in path or "conv" in path \
+                or "shift" in path:
+            return P(None, dp_ax)             # O(1) state: batch only
+        # attention kv: (R, B, T, K, hd)
+        T, K = shp[2], shp[3]
+        k_ax = "model" if _fits(K, mesh, "model") else None
+        t_ax = None
+        if dp_ax is None:
+            # batch unshardable (long_500k): context parallelism on `data`
+            # (+ `model` too when KV heads can't use it)
+            if k_ax is None and _fits(T, mesh, ("data", "model")):
+                t_ax = ("data", "model")
+            elif _fits(T, mesh, ("data",)):
+                t_ax = "data"
+        elif k_ax is None and _fits(T, mesh, ("model",)):
+            t_ax = "model"                    # seq-sharded KV (K < model)
+        return P(None, dp_ax, t_ax, k_ax, None)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def pure_dp(cfg: ArchConfig, mesh, threshold: float = 3e9) -> bool:
+    """True when a training model is small enough to replicate entirely
+    (params + f32 optimizer state under ~half an accelerator's HBM) and the
+    mesh should be used as pure data parallelism (§Perf iteration 3d)."""
+    return cfg.param_count() < threshold
+
+
+def batch_specs(mesh, batch: int, *, wide: bool = False) -> P:
+    dp = data_axes(mesh)
+    if wide:
+        axes = tuple(dp) + ("model",)
+        if _fits(batch, mesh, axes):
+            return P(axes)
+    if _fits(batch, mesh, dp):
+        return P(dp)
+    if _fits(batch, mesh, dp[-1]):
+        return P(dp[-1])
+    return P(None)
+
+
+def to_shardings(specs: Any, mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

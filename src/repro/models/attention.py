@@ -1,0 +1,216 @@
+"""GQA attention block: full-sequence (chunked/flash), decode, cross-attn.
+
+The full-sequence path is a chunked online-softmax ("flash") attention
+written in pure jnp with lax.scan — it is simultaneously (a) the memory-safe
+prefill/train path (never materialises S x T score matrices), (b) the
+reference oracle for the Pallas flash kernels, and (c) what the multi-pod
+dry-run lowers (Pallas TPU kernels cannot compile on the CPU backend).
+
+Sliding-window attention (SWA, h2o-danube3 and the -swa long-context
+variants) is the same computation with a banded mask; its decode path uses a
+ring-buffer KV cache of `window` slots, which is what makes `long_500k`
+memory-feasible for dense models.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, dense_init, dtype_of, rms_norm
+
+NEG_INF = -1e30
+
+
+def init_attention(rng, cfg, *, cross: bool = False) -> dict:
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(rng, 5)
+    dt = dtype_of(cfg)
+    p = {
+        "norm": jnp.ones((d,), jnp.float32),
+        "wq": dense_init(ks[0], (d, H * hd), dtype=dt),
+        "wk": dense_init(ks[1], (d, K * hd), dtype=dt),
+        "wv": dense_init(ks[2], (d, K * hd), dtype=dt),
+        "wo": dense_init(ks[3], (H * hd, d), dtype=dt),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((H * hd,), dt)
+        p["bk"] = jnp.zeros((K * hd,), dt)
+        p["bv"] = jnp.zeros((K * hd,), dt)
+    if cross:
+        p["q_norm"] = jnp.ones((d,), jnp.float32)
+    return p
+
+
+def _qkv(params, cfg, x, *, rope_positions=None):
+    B, S, d = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, K, hd)
+    v = v.reshape(B, S, K, hd)
+    if rope_positions is not None:
+        q = apply_rope(q, rope_positions, cfg.rope_theta)
+        k = apply_rope(k, rope_positions, cfg.rope_theta)
+    return q, k, v
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0, q_offset=0,
+                    q_chunk: int = 512, kv_chunk: int = 512) -> jax.Array:
+    """Chunked online-softmax GQA attention.
+
+    q: (B, S, H, D); k, v: (B, T, K, D) with H = K * G.  Returns (B, S, H, D).
+    `window` > 0 restricts keys to (q_pos - window, q_pos].
+    """
+    B, S, H, D = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+
+    qc = min(q_chunk, S)
+    kc = min(kv_chunk, T)
+    nq, nk = -(-S // qc), -(-T // kc)
+    pad_q, pad_k = nq * qc - S, nk * kc - T
+
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    # (nq, B, qc, K, G, D) / (nk, B, kc, K, D)
+    qs = qp.reshape(B, nq, qc, K, G, D).transpose(1, 0, 2, 3, 4, 5)
+    ks = kp.reshape(B, nk, kc, K, D).transpose(1, 0, 2, 3, 4)
+    vs = vp.reshape(B, nk, kc, K, D).transpose(1, 0, 2, 3, 4)
+
+    q_pos_base = jnp.asarray(q_offset)
+
+    def per_q_chunk(qi, q_blk):
+        q_pos = q_pos_base + qi * qc + jnp.arange(qc)          # (qc,)
+
+        def per_kv_chunk(carry, inp):
+            m, l, acc = carry
+            kj, k_blk, v_blk = inp
+            k_pos = kj * kc + jnp.arange(kc)                   # (kc,)
+            s = jnp.einsum("bqkgd,btkd->bkgqt",
+                           q_blk.astype(jnp.float32),
+                           k_blk.astype(jnp.float32)) * scale
+            mask = jnp.ones((qc, kc), bool)
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            if window:
+                mask &= k_pos[None, :] > q_pos[:, None] - window
+            mask &= (k_pos < T)[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", p, v_blk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, K, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, K, G, qc, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            per_kv_chunk, (m0, l0, a0),
+            (jnp.arange(nk), ks, vs))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]           # (B,K,G,qc,D)
+        return out.transpose(0, 3, 1, 2, 4).reshape(B, qc, H, D)
+
+    # checkpoint per q-chunk: the inner online-softmax scan otherwise saves
+    # (B,K,G,qc,D) f32 residuals for every kv block — tens of GiB/layer on
+    # command-r train_4k (§Perf bonus iteration D2)
+    outs = jax.lax.map(jax.checkpoint(lambda args: per_q_chunk(*args)),
+                       (jnp.arange(nq), qs))                   # (nq,B,qc,H,D)
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nq * qc, H, D)
+    return out[:, :S].astype(q.dtype)
+
+
+def attention_full(params, cfg, x, *, positions=None, mode: str = "train",
+                   ) -> Tuple[jax.Array, Optional[dict]]:
+    """Full-sequence attention (train / prefill). Returns (y, cache|None)."""
+    B, S, _ = x.shape
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    pos = positions if positions is not None else jnp.arange(S)
+    q, k, v = _qkv(params, cfg, h, rope_positions=pos)
+    out = flash_attention(q, k, v, causal=True, window=cfg.swa_window)
+    y = out.reshape(B, S, -1) @ params["wo"]
+    cache = None
+    if mode == "prefill":
+        if cfg.swa_window:
+            # ring-buffer layout: position p lives in slot p % W, matching
+            # attention_decode's write pattern past the wrap point
+            W = min(cfg.swa_window, S)
+            kw, vw = k[:, S - W:], v[:, S - W:]
+            if S > W:
+                kw = jnp.roll(kw, S % W, axis=1)
+                vw = jnp.roll(vw, S % W, axis=1)
+            cache = {"k": kw, "v": vw}
+        else:
+            cache = {"k": k, "v": v}
+    return x + y, cache
+
+
+def attention_decode(params, cfg, x, cache: dict, pos: jax.Array,
+                     ) -> Tuple[jax.Array, dict]:
+    """One-token decode against a KV cache.
+
+    cache["k"]/["v"]: (B, T, K, D).  For SWA, T == window and the cache is a
+    ring buffer indexed pos % window; otherwise slots are absolute and
+    positions >= pos are masked out.
+    """
+    B, S1, _ = x.shape  # S1 == 1
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))  # per-slot pos
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    q, k_new, v_new = _qkv(params, cfg, h, rope_positions=pos[:, None])
+    T = cache["k"].shape[1]
+    slot = (pos % T) if cfg.swa_window else pos
+    bidx = jnp.arange(B)
+    k = cache["k"].at[bidx, slot].set(k_new[:, 0])
+    v = cache["v"].at[bidx, slot].set(v_new[:, 0])
+
+    K, hd = cfg.n_kv_heads, cfg.hd
+    G = cfg.n_heads // K
+    qh = q.reshape(B, 1, K, G, hd)
+    # bf16 operands + f32 accumulation (MXU-native); casting the cache to
+    # f32 would materialise a 2x-size copy of the whole KV — §Perf iter 2
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qh, k,
+                   preferred_element_type=jnp.float32) / jnp.sqrt(float(hd))
+    t_idx = jnp.arange(T)
+    if cfg.swa_window:
+        # ring buffer: once pos >= T the buffer holds exactly the last T
+        # positions; before that, mask unwritten slots.
+        valid = t_idx[None] <= jnp.minimum(pos, T - 1)[:, None]
+    else:
+        valid = t_idx[None] <= pos[:, None]
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    y = out.reshape(B, 1, -1).astype(x.dtype) @ params["wo"]
+    return x + y, {"k": k, "v": v}
+
+
+def cross_attention_full(params, cfg, x, enc_kv: dict) -> jax.Array:
+    """Decoder cross-attention over precomputed encoder K/V (no mask)."""
+    B, S, _ = x.shape
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (h @ params["wq"]).reshape(B, S, H, hd)
+    out = flash_attention(q, enc_kv["k"], enc_kv["v"], causal=False)
+    y = out.reshape(B, S, -1) @ params["wo"]
+    return x + y
+
+
+def encode_cross_kv(params, cfg, enc_out: jax.Array) -> dict:
+    """Precompute cross-attention K/V from encoder output."""
+    B, T, _ = enc_out.shape
+    K, hd = cfg.n_kv_heads, cfg.hd
+    k = (enc_out @ params["wk"]).reshape(B, T, K, hd)
+    v = (enc_out @ params["wv"]).reshape(B, T, K, hd)
+    return {"k": k, "v": v}

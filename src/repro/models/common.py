@@ -1,0 +1,98 @@
+"""Shared numerics for the model zoo: norms, RoPE, init helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def dense_init(rng, shape, scale: float | None = None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(rng, shape, dtype=jnp.float32)
+            * scale).astype(dtype)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) with positions (..., S) or (S,)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(d, theta), dtype=jnp.float32)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, D/2)
+    angles = angles[..., None, :]                              # head axis
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+# Set by the launch layer for pure-data-parallel mappings (small models:
+# batch sharded over the model axis as well, weights replicated).
+BATCH_AXES_OVERRIDE = None
+
+
+def batch_axes() -> tuple:
+    """Data-parallel axes of the ambient mesh (empty tuple if no mesh)."""
+    m = jax.sharding.get_abstract_mesh()
+    if m is None or m.empty:
+        return ()
+    if BATCH_AXES_OVERRIDE is not None:
+        return tuple(a for a in BATCH_AXES_OVERRIDE if a in m.axis_names)
+    return tuple(a for a in ("pod", "data") if a in m.axis_names)
+
+
+def constrain(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint against the ambient mesh; no-op without one.
+
+    Axis names absent from the mesh are dropped.  The canonical use is
+    pinning the residual stream to batch sharding (constrain(x, BATCH)) so
+    GSPMD doesn't trade batch parallelism for feature sharding on the big
+    f32 loss/activation tensors (see EXPERIMENTS.md §Perf, iteration 0).
+    """
+    m = jax.sharding.get_abstract_mesh()
+    if m is None or m.empty:
+        return x
+    names = set(m.axis_names)
+
+    def clean(a):
+        if a is None:
+            return None
+        if isinstance(a, tuple):
+            kept = tuple(s for s in a if s in names)
+            return kept or None
+        return a if a in names else None
+
+    expanded = []
+    used = set()
+    for a in spec:
+        e = tuple(batch_axes()) or None if a == "BATCH" else clean(a)
+        # an axis may appear in at most one positional dim (pure-DP maps
+        # `model` into BATCH, which then owns it exclusively)
+        if isinstance(e, tuple):
+            e = tuple(s for s in e if s not in used) or None
+        elif e in used:
+            e = None
+        for s in (e if isinstance(e, tuple) else (e,) if e else ()):
+            used.add(s)
+        expanded.append(e)
+    expanded += [None] * (x.ndim - len(expanded))
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.PartitionSpec(*expanded))

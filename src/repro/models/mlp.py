@@ -1,0 +1,29 @@
+"""Dense MLP block (SwiGLU / GELU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, dtype_of, rms_norm, silu
+
+
+def init_mlp(rng, cfg) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    dt = dtype_of(cfg)
+    ks = jax.random.split(rng, 3)
+    p = {"norm": jnp.ones((d,), jnp.float32),
+         "w_up": dense_init(ks[0], (d, ff), dtype=dt),
+         "w_down": dense_init(ks[1], (ff, d), dtype=dt)}
+    if cfg.mlp_act == "swiglu":
+        p["w_gate"] = dense_init(ks[2], (d, ff), dtype=dt)
+    return p
+
+
+def apply_mlp(params, cfg, x) -> jax.Array:
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    up = h @ params["w_up"]
+    if cfg.mlp_act == "swiglu":
+        up = silu(h @ params["w_gate"]) * up
+    else:
+        up = jax.nn.gelu(up)
+    return x + up @ params["w_down"]

@@ -1,0 +1,332 @@
+"""Unified decoder-stack model: init / forward / prefill / decode_step.
+
+The repeating block unit is scanned with `lax.scan` (stacked parameters,
+leading axis = n_repeat) so the HLO stays one-unit-sized regardless of depth
+— essential for AOT-compiling 64-layer multi-pod configs on this CPU-only
+container.  Shared blocks (Zamba2's shared attention) live outside the scan
+xs and are closed over as scan constants.
+
+Modality carve-out (see DESIGN.md §5): whisper's conv/mel frontend and
+llava's vision tower are stubs — batches carry precomputed `frames` /
+`patches` embeddings; the transformer backbones that consume them are fully
+implemented (including the whisper encoder stack + cross-attention).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (attention_decode, attention_full,
+                        cross_attention_full, encode_cross_kv, flash_attention,
+                        init_attention)
+from .common import constrain, dense_init, dtype_of, rms_norm
+from .mlp import apply_mlp, init_mlp
+from .moe import apply_moe, init_moe
+from .spec import ArchConfig
+from .ssm import (init_mamba2, init_rwkv6, mamba2_decode, mamba2_full,
+                  rwkv6_decode, rwkv6_full)
+
+Params = Dict[str, Any]
+Cache = Dict[str, Any]
+
+# Scan unroll factor for the layer stack.  1 = rolled while-loop (fast
+# compiles; production default).  The dry-run's cost-correction pass sets
+# this to True (full unroll) so XLA's HloCostAnalysis sees every repeat —
+# it counts a while-loop body exactly once regardless of trip count.
+SCAN_UNROLL: Any = 1
+
+# Megatron-style sequence parallelism for the residual stream: shard the
+# sequence dim over `model` between blocks so the per-layer remat residual
+# shrinks by the TP factor (command-r train_4k: 301 GiB/dev of saved
+# activations otherwise — §Perf bonus iteration D3).  The launch layer
+# enables it for large-model training.
+SEQ_SHARD_RESIDUAL: bool = False
+
+_INIT = {"attn": init_attention, "cross_attn": lambda r, c: init_attention(r, c, cross=True),
+         "mlp": init_mlp, "moe": init_moe, "mamba2": init_mamba2,
+         "rwkv6": init_rwkv6}
+
+
+# ----------------------------------------------------------------------
+# Init
+# ----------------------------------------------------------------------
+
+def init_params(rng, cfg: ArchConfig) -> Params:
+    dt = dtype_of(cfg)
+    n_keys = 4 + len(cfg.unit) * (cfg.n_repeat + 1) \
+        + (cfg.encoder.n_layers * 2 + 1 if cfg.encoder else 0)
+    keys = iter(jax.random.split(rng, n_keys))
+    params: Params = {
+        "embed": dense_init(next(keys), (cfg.vocab, cfg.d_model), scale=0.02,
+                            dtype=dt),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(next(keys), (cfg.d_model, cfg.vocab),
+                                       dtype=dt)
+    unit, shared = {}, {}
+    for i, b in enumerate(cfg.unit):
+        name = f"b{i}_{b.kind}"
+        if b.shared:
+            shared[name] = _INIT[b.kind](next(keys), cfg)
+        else:
+            ks = jnp.stack(jax.random.split(next(keys), cfg.n_repeat))
+            unit[name] = jax.vmap(lambda k: _INIT[b.kind](k, cfg))(ks)
+    params["unit"] = unit
+    if shared:
+        params["shared"] = shared
+    if cfg.encoder is not None:
+        enc_unit = {}
+        for i, kind in enumerate(("attn", "mlp")):
+            ks = jnp.stack(jax.random.split(next(keys), cfg.encoder.n_layers))
+            enc_unit[f"b{i}_{kind}"] = jax.vmap(
+                lambda k: _INIT[kind](k, cfg))(ks)
+        params["encoder"] = {"unit": enc_unit,
+                             "final_norm": jnp.ones((cfg.d_model,),
+                                                    jnp.float32)}
+    return params
+
+
+# ----------------------------------------------------------------------
+# Encoder (whisper backbone; bidirectional)
+# ----------------------------------------------------------------------
+
+def _encoder_apply(params, cfg: ArchConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, F, d) stub frontend output -> encoder hidden states."""
+
+    def body(x, layer_params):
+        p_attn = layer_params["b0_attn"]
+        h = rms_norm(x, p_attn["norm"], cfg.norm_eps)
+        B, S, _ = h.shape
+        H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        q = (h @ p_attn["wq"]).reshape(B, S, H, hd)
+        k = (h @ p_attn["wk"]).reshape(B, S, K, hd)
+        v = (h @ p_attn["wv"]).reshape(B, S, K, hd)
+        out = flash_attention(q, k, v, causal=False)
+        x = x + out.reshape(B, S, -1) @ p_attn["wo"]
+        x = apply_mlp(layer_params["b1_mlp"], cfg, x)
+        return x, None
+
+    x, _ = jax.lax.scan(body, frames, params["encoder"]["unit"],
+                        unroll=SCAN_UNROLL)
+    return rms_norm(x, params["encoder"]["final_norm"], cfg.norm_eps)
+
+
+# ----------------------------------------------------------------------
+# Decoder unit application
+# ----------------------------------------------------------------------
+
+def _block_param(params, b, i, unit_params):
+    name = f"b{i}_{b.kind}"
+    return params.get("shared", {}).get(name) if b.shared \
+        else unit_params[name]
+
+
+def _unit_full(params, cfg: ArchConfig, x, *, mode: str,
+               enc_out: Optional[jax.Array],
+               remat: bool = False) -> Tuple[jax.Array, Any, Any]:
+    """Scan the unit over n_repeat in full-sequence mode."""
+
+    def body(carry, unit_params):
+        x, aux = carry
+        # keep the residual stream batch-sharded (+ sequence-sharded over
+        # the TP axis when sequence parallelism is on)
+        x = constrain(x, "BATCH", "model" if SEQ_SHARD_RESIDUAL else None)
+        caches = {}
+        for i, b in enumerate(cfg.unit):
+            p = _block_param(params, b, i, unit_params)
+            name = f"b{i}_{b.kind}"
+            if b.kind == "attn":
+                x, c = attention_full(p, cfg, x, mode=mode)
+                if c is not None:
+                    caches[name] = c
+            elif b.kind == "cross_attn":
+                x = cross_attention_full(p, cfg, x, encode_cross_kv(
+                    p, cfg, enc_out))
+                if mode == "prefill":
+                    caches[name] = encode_cross_kv(p, cfg, enc_out)
+            elif b.kind == "mlp":
+                x = apply_mlp(p, cfg, x)
+            elif b.kind == "moe":
+                x, a = apply_moe(p, cfg, x, return_aux=True)
+                aux = aux + a
+            elif b.kind == "mamba2":
+                x, c = mamba2_full(p, cfg, x, mode=mode)
+                if c is not None:
+                    caches[name] = c
+            elif b.kind == "rwkv6":
+                x, c = rwkv6_full(p, cfg, x, mode=mode)
+                if c is not None:
+                    caches[name] = c
+        return (x, aux), caches
+
+    body_fn = jax.checkpoint(body) if remat else body
+    (x, aux), caches = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                                    params["unit"], unroll=SCAN_UNROLL)
+    return x, aux, caches
+
+
+def _unit_decode(params, cfg: ArchConfig, x, cache: Cache, pos,
+                 ) -> Tuple[jax.Array, Cache]:
+    def body(x, inp):
+        unit_params, cache_slice = inp
+        new_slice = {}
+        for i, b in enumerate(cfg.unit):
+            p = _block_param(params, b, i, unit_params)
+            name = f"b{i}_{b.kind}"
+            if b.kind == "attn":
+                x, new_slice[name] = attention_decode(p, cfg, x,
+                                                      cache_slice[name], pos)
+            elif b.kind == "cross_attn":
+                x = cross_attention_full(p, cfg, x, cache_slice[name])
+                new_slice[name] = cache_slice[name]
+            elif b.kind == "mlp":
+                x = apply_mlp(p, cfg, x)
+            elif b.kind == "moe":
+                x = apply_moe(p, cfg, x)
+            elif b.kind == "mamba2":
+                x, new_slice[name] = mamba2_decode(p, cfg, x,
+                                                   cache_slice[name], pos)
+            elif b.kind == "rwkv6":
+                x, new_slice[name] = rwkv6_decode(p, cfg, x,
+                                                  cache_slice[name], pos)
+        return x, new_slice
+
+    x, new_cache = jax.lax.scan(body, x, (params["unit"], cache),
+                                unroll=SCAN_UNROLL)
+    return x, new_cache
+
+
+# ----------------------------------------------------------------------
+# Public API
+# ----------------------------------------------------------------------
+
+def _embed_inputs(params, cfg: ArchConfig, batch: Dict[str, jax.Array]
+                  ) -> jax.Array:
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    if cfg.n_patches and "patches" in batch:
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+    return constrain(x, "BATCH")
+
+
+def forward(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+            *, mode: str = "train", remat: bool = False):
+    """Full-sequence pass.
+
+    mode="train":   returns (logits, aux_loss)
+    mode="prefill": returns (last_logits, cache, aux_loss)
+    """
+    enc_out = None
+    if cfg.encoder is not None:
+        enc_out = _encoder_apply(params, cfg, batch["frames"])
+    x = _embed_inputs(params, cfg, batch)
+    x, aux, caches = _unit_full(params, cfg, x, mode=mode, enc_out=enc_out,
+                                remat=remat)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    if mode == "prefill":
+        logits = x[:, -1:] @ head
+        return constrain(logits, "BATCH", None, "model"), caches, aux
+    return constrain(x @ head, "BATCH", None, "model"), aux
+
+
+def decode_step(params: Params, cfg: ArchConfig, tokens: jax.Array,
+                cache: Cache, pos) -> Tuple[jax.Array, Cache]:
+    """One decode iteration: tokens (B, 1), cache from prefill/init_cache.
+
+    `pos` is the absolute position of the new token (scalar int32).
+    This is the paper's tau(n, L) iteration: weight streaming (every matmul
+    touches all — or active, for MoE — weights) + the KV scan over `pos`
+    cached tokens.
+    """
+    x = _embed_inputs(params, cfg, {"tokens": tokens})
+    x, new_cache = _unit_decode(params, cfg, x, cache, pos)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return constrain(x @ head, "BATCH", None, "model"), new_cache
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               *, enc_frames: int = 0, dtype=None) -> Cache:
+    """Zero-initialised decode cache (the dry-run serve_step input).
+
+    Attention caches hold `max_seq` slots (or the SWA window if smaller);
+    SSM blocks hold O(1) state — the geometry behind the 1/W-law exemption
+    of attention-free architectures (DESIGN.md §5).
+    """
+    dt = dtype or dtype_of(cfg)
+    R, K, hd = cfg.n_repeat, cfg.n_kv_heads, cfg.hd
+    cache: Cache = {}
+    for i, b in enumerate(cfg.unit):
+        name = f"b{i}_{b.kind}"
+        if b.kind == "attn":
+            slots = min(cfg.swa_window, max_seq) if cfg.swa_window else max_seq
+            cache[name] = {
+                "k": jnp.zeros((R, batch, slots, K, hd), dt),
+                "v": jnp.zeros((R, batch, slots, K, hd), dt)}
+        elif b.kind == "cross_attn":
+            cache[name] = {
+                "k": jnp.zeros((R, batch, enc_frames, K, hd), dt),
+                "v": jnp.zeros((R, batch, enc_frames, K, hd), dt)}
+        elif b.kind == "mamba2":
+            cache[name] = {
+                "conv": jnp.zeros((R, batch, cfg.d_conv - 1,
+                                   cfg.d_inner + 2 * cfg.ssm_state),
+                                  jnp.float32),
+                "ssm": jnp.zeros((R, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                                  cfg.ssm_state), jnp.float32)}
+        elif b.kind == "rwkv6":
+            cache[name] = {
+                "wkv": jnp.zeros((R, batch, cfg.rwkv_heads, cfg.rwkv_head_dim,
+                                  cfg.rwkv_head_dim), jnp.float32),
+                "shift_tm": jnp.zeros((R, batch, cfg.d_model), dt),
+                "shift_cm": jnp.zeros((R, batch, cfg.d_model), dt)}
+    return cache
+
+
+def loss_fn(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+            *, aux_weight: float = 0.01, remat: bool = False) -> jax.Array:
+    """Next-token cross-entropy (+ MoE load-balance aux).
+
+    Vocab-parallel formulation: the target logit is extracted with a fused
+    iota==target masked reduction instead of take_along_axis, so with the
+    vocab dim sharded on `model` every cross-shard exchange is (B, S)-sized.
+    (log_softmax + take_along_axis made GSPMD all-gather the full f32
+    logits — 12.3 GiB/chip/step on granite-moe train_4k, §Perf iter 2.)
+    """
+    logits, aux = forward(params, cfg, batch, mode="train", remat=remat)
+    # text tokens predict their successor; modality prefixes are unlabeled
+    txt = logits[:, -batch["tokens"].shape[1]:]
+    B, S, V = txt.shape
+    # ignore-label pad keeps S chunkable (last position has no successor)
+    targets = jnp.concatenate(
+        [batch["labels"][:, 1:], jnp.full((B, 1), -1, jnp.int32)], axis=1)
+    # Sequence-chunked CE: the unchunked f32 softmax pipeline materialised
+    # ~20 GiB/chip of (B, S, V_shard) buffers (+ a 4 GiB s32 iota) on
+    # command-r train_4k; 512-token chunks cap it at ~0.5 GiB (§Perf bonus
+    # iteration D1).
+    cs = min(512, S)
+    while S % cs:
+        cs //= 2
+    zc = jnp.moveaxis(txt.reshape(B, S // cs, cs, V), 1, 0)
+    tc = jnp.moveaxis(targets.reshape(B, S // cs, cs), 1, 0)
+
+    def chunk(carry, inp):
+        z, t = inp
+        zf = z.astype(jnp.float32)
+        m = jax.lax.stop_gradient(jnp.max(zf, axis=-1, keepdims=True))
+        zs = zf - m
+        lse = jnp.log(jnp.sum(jnp.exp(zs), axis=-1))      # (B, cs)
+        vidx = jax.lax.broadcasted_iota(jnp.int32, zs.shape, 2)
+        tl = jnp.sum(jnp.where(vidx == t[..., None], zs, 0.0), axis=-1)
+        valid = t >= 0
+        nll_sum, cnt = carry
+        return (nll_sum + jnp.sum(jnp.where(valid, lse - tl, 0.0)),
+                cnt + jnp.sum(valid)), None
+
+    (nll_sum, cnt), _ = jax.lax.scan(
+        chunk, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+        (zc, tc))
+    return nll_sum / jnp.maximum(cnt, 1) + aux_weight * aux

@@ -1,0 +1,352 @@
+"""Recurrent blocks: Mamba2 (chunked SSD) and RWKV6 (Finch) time/channel mix.
+
+Both are O(1)-state decoders — the architectures for which the paper's 1/W
+law *weakens* (no per-token KV growth; see DESIGN.md §5).  Prefill uses
+chunked scans (matmul-heavy intra-chunk + state carry across chunks), which
+is also the algorithmic shape of the Pallas kernels in repro.kernels; the
+functions here are their pure-jnp oracles.
+
+Conventions:
+  Mamba2:  S_t = exp(A dt_t) S_{t-1} + dt_t x_t (x) B_t ;  y_t = C_t . S_t + D x_t
+  RWKV6:   out_t = r_t (S_{t-1} + diag(u) k_t^T v_t) ;
+           S_t = diag(w_t) S_{t-1} + k_t^T v_t,  w_t data-dependent.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, dtype_of, rms_norm, silu
+
+# ======================================================================
+# Mamba2
+# ======================================================================
+
+
+def init_mamba2(rng, cfg) -> dict:
+    d, di, ds, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    dt = dtype_of(cfg)
+    ks = jax.random.split(rng, 4)
+    conv_ch = di + 2 * ds
+    return {
+        "norm": jnp.ones((d,), jnp.float32),
+        "w_in": dense_init(ks[0], (d, 2 * di + 2 * ds + nh), dtype=dt),
+        "conv_w": dense_init(ks[1], (cfg.d_conv, conv_ch), scale=0.5,
+                             dtype=jnp.float32),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_y": jnp.ones((di,), jnp.float32),
+        "w_out": dense_init(ks[2], (di, d), dtype=dt),
+    }
+
+
+def _causal_conv_full(x, w, b):
+    """Depthwise causal conv, x: (B,S,C), w: (K,C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, j:j + x.shape[1]] * w[j] for j in range(K))
+    return out + b
+
+
+def _mamba_inner(cfg, params, h, conv_state=None, ssm_state=None,
+                 single_step=False):
+    """Shared projection/conv/split for full & decode paths."""
+    di, ds, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = h @ params["w_in"]
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * ds], axis=-1)
+    if single_step:
+        # xbc: (B,1,C); conv_state: (B, K-1, C)
+        seq = jnp.concatenate([conv_state, xbc.astype(jnp.float32)], axis=1)
+        w = params["conv_w"]
+        conv = (seq * w[:, None] if False else
+                jnp.einsum("bkc,kc->bc", seq, w))[:, None] + params["conv_b"]
+        new_conv_state = seq[:, 1:]
+    else:
+        conv = _causal_conv_full(xbc.astype(jnp.float32), params["conv_w"],
+                                 params["conv_b"])
+        new_conv_state = xbc.astype(jnp.float32)[:, -(cfg.d_conv - 1):]
+    xbc = silu(conv)
+    xs, Bm, Cm = jnp.split(xbc, [di, di + ds], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    B_, S_ = xs.shape[0], xs.shape[1]
+    xh = xs.reshape(B_, S_, nh, cfg.ssm_head_dim)
+    return z, xh, Bm, Cm, dt, A, new_conv_state
+
+
+def mamba2_chunk_scan(xh, Bm, Cm, dt, A, D, *, chunk: int = 128,
+                      init_state: Optional[jax.Array] = None,
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.  xh:(B,S,nh,hd) Bm/Cm:(B,S,ds) dt:(B,S,nh).
+
+    Returns (y (B,S,nh,hd), final_state (B,nh,hd,ds)).
+    """
+    B, S, nh, hd = xh.shape
+    ds = Bm.shape[-1]
+    Lc = min(chunk, S)
+    nch = -(-S // Lc)
+    pad = nch * Lc - S
+
+    def padt(a):
+        return jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+
+    xh_, Bm_, Cm_, dt_ = map(padt, (xh, Bm, Cm, dt))
+    dt_ = dt_.at[:, S:].set(0.0) if pad else dt_
+    lA = dt_ * A                                  # (B, S', nh) log-decay <= 0
+    xt = xh_ * dt_[..., None]                     # x-tilde
+
+    # (nc, B, Lc, ...)
+    def chunked(a):
+        return a.reshape(B, nch, Lc, *a.shape[2:]).transpose(
+            1, 0, 2, *range(3, a.ndim + 1))
+
+    xs_c, B_c, C_c, lA_c, xt_c = map(chunked, (xh_, Bm_, Cm_, lA, xt))
+
+    s0 = (init_state if init_state is not None
+          else jnp.zeros((B, nh, hd, ds), jnp.float32))
+
+    def per_chunk(state, inp):
+        xs_k, B_k, C_k, lA_k, xt_k = inp
+        cs = jnp.cumsum(lA_k, axis=1)             # (B, Lc, nh) inclusive
+        # intra-chunk: weight(tau->q) = exp(cs_q - cs_tau), q >= tau.
+        # Mask BEFORE exp: upper-triangle diffs are large-positive and a
+        # where() after exp still back-propagates inf * 0 = NaN.
+        diff = cs[:, :, None, :] - cs[:, None, :, :]        # (B, q, t, nh)
+        tri = jnp.tril(jnp.ones((Lc, Lc), bool))[None, :, :, None]
+        G = jnp.where(tri, jnp.exp(jnp.where(tri, diff, 0.0)), 0.0)
+        att = jnp.einsum("bqs,bts->bqt", C_k, B_k)          # (B, q, t)
+        y_intra = jnp.einsum("bqt,bqtn,btnp->bqnp", att, G, xt_k)
+        # inter-chunk: y_q += exp(cs_q) * C_q . state
+        y_inter = jnp.einsum("bqs,bnps,bqn->bqnp", C_k, state,
+                             jnp.exp(cs))
+        # state update
+        dec = jnp.exp(cs[:, -1:, :] - cs)                    # (B, t, nh)
+        s_new = state * jnp.exp(cs[:, -1])[:, :, None, None] \
+            + jnp.einsum("btn,btnp,bts->bnps", dec, xt_k, B_k)
+        return s_new, y_intra + y_inter
+
+    state, ys = jax.lax.scan(per_chunk, s0, (xs_c, B_c, C_c, lA_c, xt_c))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, nch * Lc, nh, hd)[:, :S]
+    y = y + xh * D[None, None, :, None]
+    return y, state
+
+
+def mamba2_full(params, cfg, x, *, mode: str = "train",
+                ) -> Tuple[jax.Array, Optional[dict]]:
+    B, S, d = x.shape
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    z, xh, Bm, Cm, dt, A, conv_state = _mamba_inner(cfg, params, h)
+    y, state = mamba2_chunk_scan(xh, Bm, Cm, dt, A, params["D"])
+    y = y.reshape(B, S, cfg.d_inner)
+    y = rms_norm(y * silu(z.astype(jnp.float32)), params["norm_y"],
+                 cfg.norm_eps)
+    out = y.astype(x.dtype) @ params["w_out"]
+    cache = None
+    if mode == "prefill":
+        cache = {"conv": conv_state, "ssm": state}
+    return x + out, cache
+
+
+def mamba2_decode(params, cfg, x, cache: dict, pos=None,
+                  ) -> Tuple[jax.Array, dict]:
+    B, S1, d = x.shape
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    z, xh, Bm, Cm, dt, A, new_conv = _mamba_inner(
+        cfg, params, h, conv_state=cache["conv"], single_step=True)
+    # single-step SSM update
+    dA = jnp.exp(dt[:, 0] * A)                                # (B, nh)
+    xt = xh[:, 0] * dt[:, 0, :, None]                          # (B, nh, hd)
+    s_new = cache["ssm"] * dA[..., None, None] \
+        + jnp.einsum("bnp,bs->bnps", xt, Bm[:, 0])
+    y = jnp.einsum("bnps,bs->bnp", s_new, Cm[:, 0]) \
+        + xh[:, 0] * params["D"][None, :, None]
+    y = y.reshape(B, 1, cfg.d_inner)
+    y = rms_norm(y * silu(z.astype(jnp.float32)), params["norm_y"],
+                 cfg.norm_eps)
+    out = y.astype(x.dtype) @ params["w_out"]
+    return x + out, {"conv": new_conv, "ssm": s_new}
+
+
+# ======================================================================
+# RWKV6
+# ======================================================================
+
+_LORA = 64
+
+
+def init_rwkv6(rng, cfg) -> dict:
+    d, H, hd, ff = cfg.d_model, cfg.rwkv_heads, cfg.rwkv_head_dim, cfg.d_ff
+    dt = dtype_of(cfg)
+    ks = jax.random.split(rng, 10)
+    return {
+        "norm_tm": jnp.ones((d,), jnp.float32),
+        "norm_cm": jnp.ones((d,), jnp.float32),
+        "maa": 0.5 * jnp.ones((5, d), jnp.float32),   # r,k,v,g,w mixing
+        "w0": -6.0 * jnp.ones((H, hd), jnp.float32),
+        "wA": dense_init(ks[0], (d, _LORA), scale=0.01, dtype=jnp.float32),
+        "wB": dense_init(ks[1], (_LORA, H * hd), scale=0.01,
+                         dtype=jnp.float32),
+        "u": 0.5 * jnp.ones((H, hd), jnp.float32),
+        "Wr": dense_init(ks[2], (d, d), dtype=dt),
+        "Wk": dense_init(ks[3], (d, d), dtype=dt),
+        "Wv": dense_init(ks[4], (d, d), dtype=dt),
+        "Wg": dense_init(ks[5], (d, d), dtype=dt),
+        "Wo": dense_init(ks[6], (d, d), dtype=dt),
+        "ln_x": jnp.ones((d,), jnp.float32),
+        "maa_cm": 0.5 * jnp.ones((2, d), jnp.float32),
+        "Wk_cm": dense_init(ks[7], (d, ff), dtype=dt),
+        "Wv_cm": dense_init(ks[8], (ff, d), dtype=dt),
+        "Wr_cm": dense_init(ks[9], (d, d), dtype=dt),
+    }
+
+
+def _shift(x, prev=None):
+    """Token shift: x_{t-1}, with `prev` filling slot 0 (decode state)."""
+    first = prev[:, None] if prev is not None \
+        else jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def wkv6_chunk_scan(r, k, v, w, u, *, chunk: int = 64,
+                    init_state: Optional[jax.Array] = None,
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked WKV6 recurrence.
+
+    r,k,v,w: (B,S,H,hd); w in (0,1) is the per-channel data-dependent decay.
+    Returns (out (B,S,H,hd), final_state (B,H,hd,hd) [k-dim, v-dim]).
+    """
+    B, S, H, hd = r.shape
+    Lc = min(chunk, S)
+    nch = -(-S // Lc)
+    pad = nch * Lc - S
+
+    def padt(a, fill=0.0):
+        return jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                       constant_values=fill)
+
+    r_, k_, v_ = padt(r), padt(k), padt(v)
+    w_ = padt(w, fill=1.0)
+    lw = jnp.log(jnp.maximum(w_, 1e-12))                       # (B,S',H,hd)
+
+    def chunked(a):
+        return a.reshape(B, nch, Lc, H, hd).transpose(1, 0, 2, 3, 4)
+
+    r_c, k_c, v_c, lw_c = map(chunked, (r_, k_, v_, lw))
+    s0 = (init_state if init_state is not None
+          else jnp.zeros((B, H, hd, hd), jnp.float32))
+
+    def per_chunk(state, inp):
+        rk, kk, vk, lwk = inp
+        cw = jnp.cumsum(lwk, axis=1)                # inclusive (B,Lc,H,hd)
+        cw_ex = cw - lwk                            # exclusive: sum_{s<t}
+        # inter: out_t += (r_t * exp(cw_ex_t)) . state
+        y_inter = jnp.einsum("bthd,bhde->bthe", rk * jnp.exp(cw_ex), state)
+        # intra past tokens: A[t,tau] = sum_d r_t exp(cw_ex_t - cw_tau) k_tau
+        qd = rk * jnp.exp(cw_ex)                    # (B,t,H,hd)
+        kd = kk * jnp.exp(-cw)                      # (B,tau,H,hd)
+        att = jnp.einsum("bthd,bshd->bhts", qd, kd)
+        tri = jnp.tril(jnp.ones((Lc, Lc), bool), k=-1)   # strictly past
+        att = jnp.where(tri[None, None], att, 0.0)
+        y_intra = jnp.einsum("bhts,bshe->bthe", att, vk)
+        # current-token bonus
+        bonus = jnp.einsum("bthd,bthd->bth", rk, u[None, None] * kk)
+        y_bonus = bonus[..., None] * vk
+        # state update: S = diag(exp(cw_L)) S + sum_tau diag(exp(cw_L-cw_tau)) k v
+        decay_all = jnp.exp(cw[:, -1])              # (B,H,hd)
+        kdec = kk * jnp.exp(cw[:, -1][:, None] - cw)
+        s_new = state * decay_all[..., None] \
+            + jnp.einsum("bshd,bshe->bhde", kdec, vk)
+        return s_new, y_inter + y_intra + y_bonus
+
+    state, ys = jax.lax.scan(per_chunk, s0, (r_c, k_c, v_c, lw_c))
+    out = ys.transpose(1, 0, 2, 3, 4).reshape(B, nch * Lc, H, hd)[:, :S]
+    return out, state
+
+
+def _rwkv_decay(params, xw, H, hd):
+    lora = jnp.tanh(xw.astype(jnp.float32) @ params["wA"]) @ params["wB"]
+    w = jnp.exp(-jnp.exp(params["w0"].reshape(-1)
+                         + lora))                  # (B,S,H*hd) in (0,1)
+    return w.reshape(*xw.shape[:-1], H, hd)
+
+
+def rwkv6_full(params, cfg, x, *, mode: str = "train",
+               ) -> Tuple[jax.Array, Optional[dict]]:
+    B, S, d = x.shape
+    H, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    # ---- time mix ----
+    h = rms_norm(x, params["norm_tm"], cfg.norm_eps)
+    hx = _shift(h)
+    # mixing coefficients in the residual dtype: f32 maa promoted all five
+    # (B,S,d) mixed copies (and the d x d matmuls consuming them) to f32 —
+    # 40 % of this block's HBM bytes at train_4k (§Perf iteration 3a)
+    maa = params["maa"].astype(h.dtype)
+    # One batched dot for r/k/v/g: five separate d x d matmuls each paid an
+    # activation-shaped collective in their backward pass (dx = dy @ W^T
+    # partial-sums over the TP axis); batching them makes it one
+    # (§Perf iteration 3c).
+    W_tm = jnp.stack([params["Wr"], params["Wk"], params["Wv"],
+                      params["Wg"]])                       # (4, d, d)
+    delta = hx - h
+    mixed4 = h[:, :, None, :] + delta[:, :, None, :] * maa[None, None, :4]
+    proj = jnp.einsum("bsid,idf->bsif", mixed4, W_tm)
+    r = proj[:, :, 0].reshape(B, S, H, hd).astype(jnp.float32)
+    k = proj[:, :, 1].reshape(B, S, H, hd).astype(jnp.float32)
+    v = proj[:, :, 2].reshape(B, S, H, hd).astype(jnp.float32)
+    g = proj[:, :, 3]
+    xw = h + delta * maa[4]
+    w = _rwkv_decay(params, xw, H, hd)
+    out, state = wkv6_chunk_scan(r, k, v, w, params["u"])
+    out = rms_norm(out.reshape(B, S, d), params["ln_x"], cfg.norm_eps)
+    y = (out * silu(g.astype(jnp.float32))).astype(x.dtype) @ params["Wo"]
+    x = x + y
+    # ---- channel mix ----
+    h2 = rms_norm(x, params["norm_cm"], cfg.norm_eps)
+    hx2 = _shift(h2)
+    maa_cm = params["maa_cm"].astype(h2.dtype)
+    xk2 = h2 + (hx2 - h2) * maa_cm[0]
+    xr2 = h2 + (hx2 - h2) * maa_cm[1]
+    kcm = jnp.square(jax.nn.relu(xk2 @ params["Wk_cm"]))
+    out2 = jax.nn.sigmoid(xr2 @ params["Wr_cm"]) * (kcm @ params["Wv_cm"])
+    x = x + out2.astype(x.dtype)
+    cache = None
+    if mode == "prefill":
+        cache = {"wkv": state, "shift_tm": h[:, -1], "shift_cm": h2[:, -1]}
+    return x, cache
+
+
+def rwkv6_decode(params, cfg, x, cache: dict, pos=None,
+                 ) -> Tuple[jax.Array, dict]:
+    B, S1, d = x.shape
+    H, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    h = rms_norm(x, params["norm_tm"], cfg.norm_eps)
+    hx = _shift(h, prev=cache["shift_tm"])
+    maa = params["maa"].astype(h.dtype)
+    mixed = [h + (hx - h) * maa[i] for i in range(5)]
+    xr, xk, xv, xg, xw = mixed
+    r = (xr @ params["Wr"]).reshape(B, H, hd).astype(jnp.float32)
+    k = (xk @ params["Wk"]).reshape(B, H, hd).astype(jnp.float32)
+    v = (xv @ params["Wv"]).reshape(B, H, hd).astype(jnp.float32)
+    g = xg @ params["Wg"]
+    w = _rwkv_decay(params, xw, H, hd)[:, 0]        # (B,H,hd)
+    S_prev = cache["wkv"]
+    out = jnp.einsum("bhd,bhde->bhe", r, S_prev) \
+        + jnp.einsum("bhd,bhd->bh", r, params["u"][None] * k)[..., None] \
+        * v
+    s_new = S_prev * w[..., None] + jnp.einsum("bhd,bhe->bhde", k, v)
+    out = rms_norm(out.reshape(B, 1, d), params["ln_x"], cfg.norm_eps)
+    y = (out * silu(g.astype(jnp.float32))).astype(x.dtype) @ params["Wo"]
+    x = x + y
+    h2 = rms_norm(x, params["norm_cm"], cfg.norm_eps)
+    hx2 = _shift(h2, prev=cache["shift_cm"])
+    maa_cm = params["maa_cm"].astype(h2.dtype)
+    xk2 = h2 + (hx2 - h2) * maa_cm[0]
+    xr2 = h2 + (hx2 - h2) * maa_cm[1]
+    kcm = jnp.square(jax.nn.relu(xk2 @ params["Wk_cm"]))
+    out2 = jax.nn.sigmoid(xr2 @ params["Wr_cm"]) * (kcm @ params["Wv_cm"])
+    x = x + out2.astype(x.dtype)
+    return x, {"wkv": s_new, "shift_tm": h[:, 0], "shift_cm": h2[:, 0]}

@@ -1,0 +1,7 @@
+from .energy import EnergyMeter
+from .engine import PoolEngine
+from .request import Request, synthetic_requests
+from .router import ContextRouter, RouterPolicy
+
+__all__ = ["EnergyMeter", "PoolEngine", "Request", "synthetic_requests",
+           "ContextRouter", "RouterPolicy"]

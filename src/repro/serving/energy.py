@@ -1,0 +1,55 @@
+"""Per-pool energy metering — the serving-side realisation of Eq. 2/4.
+
+Every engine iteration is charged P(b) * tau analytically (this container
+has no power sensors; tau comes from the calibrated decode roofline, P(b)
+from the logistic power model).  The integration test in
+tests/serving/test_energy.py checks the meter converges to the analytical
+tok/W of core.tokenomics under the same operating point — closing the loop
+between the executable system and the paper's closed-form law.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.profiles import BaseProfile
+
+
+@dataclasses.dataclass
+class EnergyMeter:
+    profile: BaseProfile
+    joules: float = 0.0
+    idle_joules: float = 0.0
+    tokens: int = 0
+    prefill_tokens: int = 0
+    sim_time_s: float = 0.0
+
+    def charge_decode_step(self, n_active: int, mean_context: float) -> float:
+        """Charge one continuous-batching iteration; returns tau (s)."""
+        tau_s = float(self.profile.roofline.tau_ms(max(n_active, 1),
+                                                   mean_context)) * 1e-3
+        power = self.profile.power_w(n_active)
+        self.joules += power * tau_s
+        self.tokens += n_active
+        self.sim_time_s += tau_s
+        return tau_s
+
+    def charge_prefill(self, n_tokens: int, *, mfu: float = 0.8,
+                       streamed_params: float = 1e9) -> float:
+        flops = 2.0 * streamed_params * n_tokens
+        t = flops / (self.profile.tp * self.profile.chip.peak_bf16_flops
+                     * mfu)
+        self.joules += self.profile.power_w(1) * t
+        self.prefill_tokens += n_tokens
+        self.sim_time_s += t
+        return t
+
+    def charge_idle(self, dt_s: float) -> None:
+        self.joules += self.profile.power_model.p_idle_w * dt_s
+        self.idle_joules += self.profile.power_model.p_idle_w * dt_s
+        self.sim_time_s += dt_s
+
+    @property
+    def tok_per_watt(self) -> float:
+        """Output tokens per watt == tokens / joules * seconds... i.e.
+        (tokens/s) / (joules/s); output-only accounting per the paper."""
+        return self.tokens / self.joules if self.joules else 0.0

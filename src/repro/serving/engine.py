@@ -1,0 +1,176 @@
+"""Continuous-batching decode engine.
+
+One `PoolEngine` is one "instance" in the paper's terms: a model replica
+serving one context window.  It owns:
+
+  * a slotted KV/state cache slab of exactly `n_max` sequences — Eq. 3's
+    concurrency ceiling enforced as the scheduler's admission limit;
+  * a jitted decode step over all slots (inactive slots compute masked
+    garbage, as real continuous-batching engines do);
+  * an EnergyMeter charging every iteration P(b) * tau.
+
+Prefill runs per-request at admission and its K/V is spliced into the slab
+(the chunked-prefill interleave is modeled on the energy side only —
+see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.profiles import BaseProfile
+from repro.models import model as M
+from repro.models.spec import ArchConfig
+
+from .energy import EnergyMeter
+from .request import Request
+
+
+class PoolEngine:
+    def __init__(self, cfg: ArchConfig, params, *, window: int,
+                 profile: BaseProfile, n_slots: Optional[int] = None,
+                 name: str = "pool", rng_seed: int = 0):
+        self.cfg, self.params = cfg, params
+        self.window = window
+        self.name = name
+        self.profile = profile
+        self.n_slots = n_slots if n_slots is not None \
+            else max(profile.n_max(window), 1)
+        self.meter = EnergyMeter(profile)
+        self.queue: Deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * self.n_slots
+        self.pos = np.zeros(self.n_slots, np.int32)       # next write position
+        self.tokens = np.zeros(self.n_slots, np.int64)    # last emitted token
+        self.preempted = 0
+        self.cache = M.init_cache(cfg, self.n_slots, window)
+        self._step = jax.jit(
+            lambda p, t, c, pos: M.decode_step(p, cfg, t, c, pos))
+        self._prefill = jax.jit(
+            lambda p, toks: M.forward(p, cfg, {"tokens": toks},
+                                      mode="prefill"))
+        self.completed: List[Request] = []
+
+    # --- admission ------------------------------------------------------
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def submit(self, req: Request) -> None:
+        req.pool = self.name
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        while self.queue and None in self.slots:
+            req = self.queue.popleft()
+            slot = self.slots.index(None)
+            prompt = jnp.asarray(req.prompt[None, :])
+            logits, cache, _ = self._prefill(self.params, prompt)
+            self.meter.charge_prefill(
+                req.prompt_len,
+                streamed_params=self.cfg.analytical_spec().streamed_params)
+            self._splice(cache, slot, req.prompt_len)
+            self.slots[slot] = req
+            self.pos[slot] = req.prompt_len
+            self.tokens[slot] = int(jnp.argmax(logits[0, -1]))
+            req.generated = [int(self.tokens[slot])]
+            req.first_token_time = self.meter.sim_time_s
+
+    def _splice(self, prefill_cache, slot: int, plen: int) -> None:
+        """Write a single-sequence prefill cache into slab slot `slot`."""
+        def put(slab, piece):
+            piece0 = piece[:, 0]  # drop the size-1 prefill batch axis
+            if piece0.shape == slab.shape[:1] + slab.shape[2:]:
+                return slab.at[:, slot].set(piece0)      # O(1)-state caches
+            # attention K/V: prefill wrote t <= slab-seq slots (SWA caches
+            # arrive already ring-aligned from attention_full)
+            t = min(piece0.shape[1], slab.shape[2])
+            return slab.at[:, slot, :t].set(piece0[:, -t:])
+
+        self.cache = jax.tree.map(put, self.cache, prefill_cache)
+
+    # --- preemption (paper §10.1: "KV-cache eviction under memory
+    # pressure ... reduces achievable throughput") ------------------------
+    def preempt(self, slot: int) -> None:
+        """Evict a running request back to the queue (its KV is dropped;
+        it will re-prefill on re-admission — the real cost of eviction)."""
+        req = self.slots[slot]
+        if req is None:
+            return
+        req.generated = None      # restart generation on re-admission
+        req.preemptions += 1
+        self.queue.appendleft(req)
+        self.slots[slot] = None
+        self.preempted += 1
+
+    def shrink(self, new_slots: int) -> None:
+        """Memory-pressure response: reduce live concurrency by evicting
+        the youngest requests (least wasted work)."""
+        while self.n_active > new_slots:
+            ages = [(self.pos[i] - s.prompt_len, i)
+                    for i, s in enumerate(self.slots) if s is not None]
+            _, victim = min(ages)
+            self.preempt(victim)
+
+    # --- one continuous-batching iteration ------------------------------
+    def step(self) -> int:
+        self._admit()
+        n_act = self.n_active
+        if n_act == 0:
+            return 0
+        active = np.array([s is not None for s in self.slots])
+        toks = jnp.asarray(self.tokens[:, None])
+        pos = jnp.asarray(self.pos)
+        logits, self.cache = self._step(self.params, toks, self.cache, pos)
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        mean_ctx = float(self.pos[active].mean()) if active.any() else 0.0
+        self.meter.charge_decode_step(n_act, mean_ctx)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            req.generated.append(int(nxt[i]))
+            self.tokens[i] = nxt[i]
+            self.pos[i] += 1
+            if req.done or self.pos[i] >= self.window - 1:
+                req.finish_time = self.meter.sim_time_s
+                self.completed.append(req)
+                self.slots[i] = None
+        return n_act
+
+    def run_until_drained(self, max_iters: int = 100_000) -> None:
+        it = 0
+        while (self.queue or self.n_active) and it < max_iters:
+            self.step()
+            it += 1
+
+    def latency_percentiles(self) -> Dict[str, float]:
+        """TTFT / end-to-end percentiles over completed requests (sim
+        time; arrival_time treated as submission into this engine)."""
+        if not self.completed:
+            return {}
+        ttft = np.array([r.first_token_time - r.arrival_time
+                         for r in self.completed if r.first_token_time >= 0])
+        e2e = np.array([r.finish_time - r.arrival_time
+                        for r in self.completed if r.finish_time >= 0])
+        out = {}
+        if len(ttft):
+            out["ttft_p50_s"] = round(float(np.quantile(ttft, 0.5)), 4)
+            out["ttft_p99_s"] = round(float(np.quantile(ttft, 0.99)), 4)
+        if len(e2e):
+            out["e2e_p99_s"] = round(float(np.quantile(e2e, 0.99)), 4)
+        return out
+
+    def stats(self) -> Dict[str, float]:
+        return dict(name=self.name, window=self.window,
+                    n_slots=self.n_slots,
+                    completed=len(self.completed),
+                    preempted=self.preempted,
+                    tokens=self.meter.tokens,
+                    joules=round(self.meter.joules, 1),
+                    tok_per_watt=round(self.meter.tok_per_watt, 3),
+                    sim_time_s=round(self.meter.sim_time_s, 3),
+                    **self.latency_percentiles())

@@ -1,0 +1,52 @@
+"""Request/stream abstractions for the serving runtime."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (P,) int token ids
+    max_new_tokens: int
+    arrival_time: float = 0.0
+    # runtime state
+    generated: Optional[List[int]] = None
+    pool: str = ""
+    finish_time: float = -1.0
+    first_token_time: float = -1.0
+    preemptions: int = 0
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def predicted_total(self) -> int:
+        return self.prompt_len + self.max_new_tokens
+
+    @property
+    def done(self) -> bool:
+        return (self.generated is not None
+                and len(self.generated) >= self.max_new_tokens)
+
+
+def synthetic_requests(workload, n: int, vocab: int, *, seed: int = 0,
+                       max_total: int = 4096) -> List[Request]:
+    """Draw (prompt_len, output_len) from a core.workloads trace and attach
+    synthetic token ids (clipped so tiny CPU demos stay tractable)."""
+    lens = workload.sample_requests(n, seed=seed)
+    rng = np.random.default_rng(seed + 7)
+    reqs = []
+    t = 0.0
+    for i, (p, o) in enumerate(lens):
+        p = int(min(p, max_total - 1))
+        o = int(min(o, max_total - p))
+        t += rng.exponential(1.0 / workload.arrival_rate)
+        reqs.append(Request(
+            rid=i, prompt=rng.integers(0, vocab, size=max(p, 1)),
+            max_new_tokens=max(o, 1), arrival_time=t))
+    return reqs

@@ -1,0 +1,71 @@
+"""Context-length router — the paper's technique as a serving-layer feature.
+
+`ContextRouter` fronts a set of PoolEngines and routes each request by its
+context-length prediction, implementing the three §4 topologies:
+
+  homo      — one pool, the long window.
+  two_pool  — conservative static split: short iff
+              prompt + p99(output) <= B_short (no overflow handling).
+  fleetopt  — overflow split: short iff predicted total <= gamma * B_short,
+              with the short pool serving window gamma * B_short.
+
+The router is what determines which segment of the logistic P(b) curve each
+engine occupies — the mechanism behind the fleet-level 2.5x (paper §4.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .engine import PoolEngine
+from .request import Request
+
+
+@dataclasses.dataclass
+class RouterPolicy:
+    kind: str                  # homo | two_pool | fleetopt
+    b_short: int = 4096
+    gamma: float = 2.0
+    p99_output: int = 1024     # conservative two_pool admission margin
+
+
+class ContextRouter:
+    def __init__(self, pools: Dict[str, PoolEngine], policy: RouterPolicy):
+        self.pools = pools
+        self.policy = policy
+        if policy.kind != "homo":
+            assert "short" in pools and "long" in pools, sorted(pools)
+
+    def route(self, req: Request) -> str:
+        p = self.policy
+        if p.kind == "homo":
+            name = next(iter(self.pools))
+        elif p.kind == "two_pool":
+            name = ("short" if req.prompt_len + p.p99_output <= p.b_short
+                    else "long")
+        elif p.kind == "fleetopt":
+            name = ("short" if req.predicted_total <= p.gamma * p.b_short
+                    else "long")
+        else:
+            raise ValueError(p.kind)
+        self.pools[name].submit(req)
+        return name
+
+    def run(self, requests: List[Request], *, max_iters: int = 100_000
+            ) -> Dict[str, dict]:
+        for r in requests:
+            self.route(r)
+        for eng in self.pools.values():
+            eng.run_until_drained(max_iters=max_iters)
+        return self.report()
+
+    def report(self) -> Dict[str, dict]:
+        out = {name: eng.stats() for name, eng in self.pools.items()}
+        tot_tok = sum(s["tokens"] for s in out.values())
+        tot_j = sum(s["joules"] for s in out.values())
+        out["fleet"] = dict(tokens=tot_tok, joules=round(tot_j, 1),
+                            tok_per_watt=round(tot_tok / tot_j, 3)
+                            if tot_j else 0.0)
+        return out

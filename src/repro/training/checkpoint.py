@@ -1,0 +1,41 @@
+"""Minimal checkpointing: pytree <-> .npz with path-flattened keys."""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, params: Any, step: int = 0) -> None:
+    flat = _flatten(params)
+    flat["__step__"] = np.asarray(step)
+    tmp = path + ".tmp"
+    np.savez(tmp, **flat)
+    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+
+
+def load_checkpoint(path: str, template: Any):
+    """Restore into the structure of `template` (shape/dtype preserved)."""
+    data = np.load(path)
+    step = int(data["__step__"])
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path_elems, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_elems)
+        arr = jnp.asarray(data[key], dtype=leaf.dtype)
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves), step

@@ -1,0 +1,68 @@
+"""AdamW in pure JAX (no optax dependency) + cosine LR schedule."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 20
+    total_steps: int = 1000
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree.map(zeros, params),
+                          nu=jax.tree.map(zeros, params))
+
+    def schedule(self, step) -> jax.Array:
+        warm = jnp.minimum(step / max(self.warmup_steps, 1), 1.0)
+        prog = jnp.clip((step - self.warmup_steps)
+                        / max(self.total_steps - self.warmup_steps, 1), 0, 1)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return self.lr * warm * (0.1 + 0.9 * cos)
+
+    def update(self, grads, state: AdamWState, params
+               ) -> Tuple[Any, AdamWState]:
+        # global-norm clip
+        leaves = jax.tree.leaves(grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in leaves))
+        scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+        step = state.step + 1
+        lr = self.schedule(step)
+        b1t = 1 - self.b1 ** step.astype(jnp.float32)
+        b2t = 1 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * g * g
+            upd = (m / b1t) / (jnp.sqrt(v / b2t) + self.eps)
+            upd = upd + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype), m, v
+
+        flat = jax.tree.map(upd, grads, state.mu, state.nu, params)
+        new_params = jax.tree.map(lambda t: t[0], flat,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        new_nu = jax.tree.map(lambda t: t[2], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, AdamWState(step=step, mu=new_mu, nu=new_nu)

@@ -1,0 +1,54 @@
+"""Training loop substrate: train_step + TrainState."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.spec import ArchConfig
+
+from .optimizer import AdamW, AdamWState
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: AdamWState
+
+
+def make_train_step(cfg: ArchConfig, opt: AdamW):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  Pure function of its inputs — safe to jit/pjit."""
+
+    def train_step(params, opt_state, batch: Dict[str, jax.Array]):
+        loss, grads = jax.value_and_grad(
+            lambda p: M.loss_fn(p, cfg, batch))(params)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        return new_params, new_opt, {"loss": loss, "grad_norm": gnorm,
+                                     "lr": opt.schedule(new_opt.step)}
+
+    return train_step
+
+
+def train_loop(cfg: ArchConfig, *, steps: int, batch_iter, opt: AdamW,
+               rng=None, log_every: int = 10, callback=None):
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    params = M.init_params(rng, cfg)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt), donate_argnums=(0, 1))
+    history = []
+    for i in range(steps):
+        batch = next(batch_iter)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if i % log_every == 0 or i == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({"step": i, **m})
+            if callback:
+                callback(i, m)
+    return params, opt_state, history

@@ -1,0 +1,11 @@
+import os
+import sys
+
+# tests run with `PYTHONPATH=src pytest tests/`; make that robust even when
+# invoked from elsewhere.  NOTE: no XLA device-count flags here — smoke tests
+# and benches must see 1 device (the 512-device mesh exists only inside
+# repro.launch.dryrun subprocesses).
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)

@@ -1,0 +1,133 @@
+"""§3.2 architecture effects + §5 design space + per-arch profiles."""
+import pytest
+
+from repro.core import computed_profile, context_sweep, fit_one_over_w
+from repro.core.hardware import B200, H100
+from repro.core.modelspec import (LLAMA31_8B, LLAMA31_70B, LLAMA31_405B,
+                                  QWEN3_235B_A22B)
+from repro.core.moe import dispatch_sensitivity, moe_profile
+from repro.core.power import B200_POWER, H100_POWER
+from repro.core.profiles import (GB200_LLAMA70B, H100_LLAMA70B, H200_LLAMA70B,
+                                 B200_LLAMA70B)
+from repro.core.tokenomics import tok_per_dollar_m
+from repro.configs import get_config, list_archs
+
+
+def test_moe_active_param_advantage():
+    """§3.2 mechanism: per-iteration decode time scales with *active*
+    weights.  NOTE (documented in EXPERIMENTS.md §Claims): the paper's
+    Table-2 cell (37.8 tok/W = 5.1x) divides n_max-throughput by ~P(1)
+    power — its 405B row implies 289 W, *below* the 300 W idle floor, so
+    the table is internally inconsistent.  The recoverable, physical form
+    of the claim is the fixed-concurrency advantage in the
+    weight-stream-bound regime, which we gate here."""
+    dense = computed_profile(LLAMA31_70B, H100, H100_POWER, tp=8)
+    moe = moe_profile(QWEN3_235B_A22B, H100, H100_POWER, tp=8)
+    # W-stream override: W scales with the *active* fraction (22/235 of a
+    # dense 235B; §3.2 quotes 1.6 ms = our 2.11 ms at the paper's 100%-of-
+    # peak bandwidth convention vs our calibrated 77.7% efficiency)
+    assert (moe.roofline.w_ms / dense.roofline.w_ms
+            == pytest.approx(22e9 / 70.6e9, rel=0.02))
+    assert moe.roofline.w_ms * 0.777 == pytest.approx(1.64, rel=0.05)
+    # advantage at fixed moderate concurrency (same P(b) for both):
+    adv8 = moe.tok_per_watt(8, 8192) / dense.tok_per_watt(8, 8192)
+    assert 2.0 < adv8 < 5.0
+    # the low-concurrency limit approaches the W ratio (~4.1x)
+    adv1 = moe.tokens_per_s(1, 8192) / dense.tokens_per_s(1, 8192)
+    assert adv1 == pytest.approx(dense.roofline.w_ms / moe.roofline.w_ms,
+                                 rel=0.15)
+    # at full n_max both are KV-scan-bound and the advantage collapses —
+    # the beyond-paper correction to Table 2
+    adv_full = (moe.tok_per_watt_at_window(8192)
+                / dense.tok_per_watt_at_window(8192))
+    assert adv_full < adv8
+
+
+def test_dispatch_sensitivity_shrinks_advantage():
+    """§3.2: 'at 10 ms of dispatch overhead the 5x shrinks to ~1.5x'."""
+    pts = dispatch_sensitivity(QWEN3_235B_A22B, LLAMA31_70B, H100,
+                               H100_POWER)
+    advs = {p.dispatch_ms: p.advantage_vs_dense for p in pts}
+    assert advs[0.0] == max(advs.values())          # zero-dispatch = bound
+    assert advs[0.0] > 2.0                          # the §3.2 lever exists
+    assert advs[10.0] < 0.45 * advs[0.0]            # ...and dispatch eats it
+    vals = [p.advantage_vs_dense for p in pts]
+    assert vals == sorted(vals, reverse=True)        # monotone decreasing
+
+
+def test_405b_near_zero_regime():
+    """Table 2: 405B on H100 is n_max ~ 1 (weights ~ exhaust VRAM); B200's
+    memory lifts it out (24x tok/W jump direction)."""
+    h = computed_profile(LLAMA31_405B, H100, H100_POWER, tp=8)
+    b = computed_profile(LLAMA31_405B, B200, B200_POWER, tp=8)
+    assert h.n_max(8192) == 1
+    assert b.n_max(8192) >= 10
+    assert (b.tok_per_watt_at_window(8192)
+            > 10 * h.tok_per_watt_at_window(8192))
+
+
+def test_table5_generation_ordering():
+    """Table 5 @8K: H200 ~2.1x H100; B200 > H200 in tok/W; GB200-NVL lower
+    tok/W than B200 (higher TDP, same compute)."""
+    tpw = {n: p.tok_per_watt_at_window(8192)
+           for n, p in [("H100", H100_LLAMA70B), ("H200", H200_LLAMA70B),
+                        ("B200", B200_LLAMA70B), ("GB200", GB200_LLAMA70B)]}
+    assert tpw["H200"] / tpw["H100"] == pytest.approx(2.1, rel=0.3)
+    assert tpw["B200"] > tpw["H200"] > tpw["H100"]
+    assert tpw["GB200"] < tpw["B200"]
+    # Table 5: B200 wins tok/$M too
+    assert (tok_per_dollar_m(B200_LLAMA70B, 8192)
+            > tok_per_dollar_m(H200_LLAMA70B, 8192)
+            > tok_per_dollar_m(H100_LLAMA70B, 8192))
+
+
+def test_quantization_halves_w():
+    """§5.2: fp8 halves weight bytes -> W, roughly doubling tok/W at fixed
+    concurrency for weight-streaming-bound models."""
+    import dataclasses
+    fp16 = computed_profile(LLAMA31_70B, H100, H100_POWER, tp=8)
+    fp8_model = dataclasses.replace(LLAMA31_70B, dtype_bytes=1.0)
+    fp8 = computed_profile(fp8_model, H100, H100_POWER, tp=8)
+    assert fp8.roofline.w_ms == pytest.approx(fp16.roofline.w_ms / 2, rel=0.01)
+
+
+# ---- the paper's law applied to every assigned architecture --------------
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_arch_profile_and_law(arch):
+    """Each assigned architecture gets a ComputedProfile; the 1/W law holds
+    for attention archs and *vanishes* for attention-free ones (DESIGN §5)."""
+    cfg = get_config(arch)
+    spec = cfg.analytical_spec()
+    prof = computed_profile(spec, H100, H100_POWER,
+                            tp=8 if spec.n_params > 2e10 else 1)
+    if spec.n_kv_heads == 0:          # rwkv6: no KV growth
+        assert spec.kv_bytes_per_token() == 0.0
+        return
+    fit = fit_one_over_w(prof, contexts=(2048, 4096, 8192, 16384, 32768))
+    if cfg.arch_type == "hybrid":
+        # Zamba2: only 9 of ~54 blocks hold KV -> far smaller kappa than a
+        # same-class full-attention transformer (the law weakens)
+        kappa_hybrid = spec.kv_bytes_per_token(tp=8)
+        kappa_70b = 2 * 1 * 128 * 2 * 80  # llama-70B TP8-sharded
+        assert kappa_hybrid < 0.6 * kappa_70b
+    assert fit.slope < -0.5           # halving behaviour present
+
+
+def test_moe_archs_have_active_override():
+    for arch in ("granite-moe-1b-a400m", "grok-1-314b"):
+        spec = get_config(arch).analytical_spec()
+        assert spec.is_moe
+        assert spec.n_active_params < 0.45 * spec.n_params
+
+
+def test_assigned_param_counts():
+    """Config geometry sanity vs the assignment's stated sizes."""
+    expect = {"granite-moe-1b-a400m": 1.4e9, "zamba2-2.7b": 2.4e9,
+              "whisper-medium": 0.8e9, "h2o-danube-3-4b": 4.0e9,
+              "llava-next-34b": 34e9, "granite-3-8b": 8.4e9,
+              "yi-6b": 6.1e9, "rwkv6-1.6b": 1.6e9,
+              "command-r-plus-104b": 107e9, "grok-1-314b": 316e9}
+    for arch, target in expect.items():
+        got = get_config(arch).param_count()
+        assert got == pytest.approx(target, rel=0.35), (arch, got / 1e9)

@@ -1,0 +1,85 @@
+"""Paper §10.3 future-work items, implemented and tested:
+prefill-decode disaggregation, speculative decoding in P(b), adaptive
+topology control."""
+import numpy as np
+import pytest
+
+from repro.core import AZURE, H100_LLAMA70B, FleetOpt, computed_profile
+from repro.core.adaptive import AdaptiveController
+from repro.core.disagg import Disaggregated
+from repro.core.hardware import H100
+from repro.core.modelspec import LLAMA31_8B, LLAMA31_70B
+from repro.core.power import H100_POWER
+from repro.core.speculative import speculative_tok_per_watt, sweep
+from repro.core.workloads import AGENT, AZURE
+
+
+def test_disagg_energy_economics():
+    """Beyond-paper finding that *contradicts* the paper's §10.3 hope:
+    under output-only tok/W accounting, prefill-decode disaggregation
+    LOSES to interleaved FleetOpt — the dedicated prefill fleet runs
+    compute-saturated (~P_nom) watts that chunked-prefill interleaving
+    absorbed for free inside memory-bound decode bubbles.  Disaggregation
+    only looks better if prefill energy is excluded from the denominator
+    (which is an accounting choice, not a saving).  Splitwise optimizes
+    latency isolation, not energy."""
+    fo = FleetOpt(b_short=4096, gamma=2.0).provision(
+        AZURE, H100_LLAMA70B, LLAMA31_70B)
+    dis = Disaggregated(b_short=4096, gamma=2.0).provision(
+        AZURE, H100_LLAMA70B, LLAMA31_70B)
+    assert dis.tokens_per_s == pytest.approx(fo.tokens_per_s, rel=0.05)
+    decode_inst = sum(p.instances for p in dis.pools
+                      if p.name.startswith("decode"))
+    assert decode_inst < fo.instances          # decode fleet shrinks...
+    assert dis.tok_per_watt < fo.tok_per_watt  # ...but whole-fleet tok/W drops
+    # decode-side-only accounting (prefill excluded): better than fo
+    dec_pools = [p for p in dis.pools if p.name.startswith("decode")]
+    dec_tpw = (sum(p.tokens_per_s for p in dec_pools)
+               / sum(p.instances * p.power_w_per_instance
+                     for p in dec_pools))
+    assert dec_tpw > fo.tok_per_watt
+
+
+def test_disagg_kv_handoff_is_ici_feasible():
+    bps = Disaggregated.kv_handoff_bytes_per_s(AZURE, LLAMA31_70B)
+    # ~1000 req/s * ~1.4K tokens * 328KB/token ~ 0.5 TB/s across the fleet;
+    # tens of instances * 450 GB/s links: feasible, but not free
+    assert 1e11 < bps < 2e12
+
+
+def test_speculative_decoding_tradeoff():
+    target = H100_LLAMA70B
+    draft = computed_profile(LLAMA31_8B, H100, H100_POWER, tp=1)
+    good = speculative_tok_per_watt(target, draft, accept_rate=0.8,
+                                    speculation_len=4)
+    bad = speculative_tok_per_watt(target, draft, accept_rate=0.5,
+                                   speculation_len=8)
+    assert good.tok_per_watt > bad.tok_per_watt
+    assert good.tokens_per_round > 2.9          # (1-.8^5)/.2
+    # the §10.3 open question answered within the model: high acceptance
+    # helps, long speculation at low acceptance burns draft watts
+    assert good.speedup_vs_plain > 1.0
+    assert bad.speedup_vs_plain < good.speedup_vs_plain
+    pts = sweep(target, draft)
+    assert len(pts) == 12
+    assert all(p.tok_per_watt > 0 for p in pts)
+
+
+def test_adaptive_controller_tracks_distribution_shift():
+    ctl = AdaptiveController(H100_LLAMA70B, LLAMA31_70B,
+                             reoptimize_every=2000, capacity=4000, seed=1)
+    rng = np.random.default_rng(0)
+    # phase 1: chat-like traffic (short)
+    idx = rng.integers(0, 200_000, 3000)
+    for p, o in zip(AZURE.prompts[idx], AZURE.outputs[idx]):
+        ctl.observe(int(p), int(o))
+    b_chat = ctl.history[-1]["b_short"] if ctl.history else ctl.b_short
+    # phase 2: agent-heavy traffic (long, dispersed)
+    idx = rng.integers(0, 200_000, 6000)
+    for p, o in zip(AGENT.prompts[idx], AGENT.outputs[idx]):
+        ctl.observe(int(p), int(o))
+    b_agent = ctl.history[-1]["b_short"]
+    assert b_agent >= b_chat            # boundary grows with the traffic
+    assert len(ctl.history) >= 2
+    assert ctl.route(100, 325.0) == "short"
+    assert ctl.route(60000, 325.0) == "long"

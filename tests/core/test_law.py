@@ -1,0 +1,76 @@
+"""The 1/W law (paper Table 1, §3.1) — the core claim."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (B200_LLAMA70B, H100_LLAMA70B, context_sweep,
+                        fit_one_over_w)
+from repro.core.kvcache import n_max
+
+# Table 1, full reproduction targets.
+H100_TABLE1 = [(2048, 512, 598, 35.0), (4096, 256, 593, 17.6),
+               (8192, 128, 583, 8.97), (16384, 64, 557, 4.69),
+               (32768, 32, 507, 2.58), (65536, 16, 435, 1.50),
+               (131072, 8, 369, 0.88)]
+B200_TABLE1 = [(2048, 1343, 859, 61.4), (4096, 671, 857, 30.8),
+               (8192, 335, 852, 15.5), (16384, 167, 838, 7.87),
+               (32768, 83, 805, 4.09), (65536, 41, 735, 2.24),
+               (131072, 20, 630, 1.30)]
+
+
+@pytest.mark.parametrize("profile,table", [
+    (H100_LLAMA70B, H100_TABLE1), (B200_LLAMA70B, B200_TABLE1)],
+    ids=["H100", "B200"])
+def test_table1_full(profile, table):
+    rows = context_sweep(profile, [r[0] for r in table])
+    for row, (ctx, nm, psat, tpw) in zip(rows, table):
+        assert row.n_max == nm, (ctx, row.n_max, nm)
+        assert row.p_sat_w == pytest.approx(psat, rel=0.01)
+        assert row.tok_per_watt == pytest.approx(tpw, rel=0.02)
+
+
+def test_nmax_exact_halving():
+    """Eq. 3: doubling W halves n_max exactly (power-of-two capacities)."""
+    rows = context_sweep(H100_LLAMA70B)
+    for a, b in zip(rows, rows[1:]):
+        assert a.n_max == 2 * b.n_max
+
+
+def test_tok_per_watt_halves_per_doubling():
+    """The 1/W law: each doubling multiplies tok/W by ~0.5 (drifting up to
+    ~0.59 at long context where idle power dominates — paper §3.1)."""
+    fit = fit_one_over_w(H100_LLAMA70B)
+    assert all(0.48 <= r <= 0.60 for r in fit.halving_ratios)
+    assert fit.slope < -0.85
+    assert fit.r2 > 0.99
+
+
+def test_b200_shifts_curve_not_slope():
+    """§3.1: B200 lifts the curve 1.5-1.8x but the halving law holds."""
+    f_h, f_b = fit_one_over_w(H100_LLAMA70B), fit_one_over_w(B200_LLAMA70B)
+    assert abs(f_h.slope - f_b.slope) < 0.1
+    h = context_sweep(H100_LLAMA70B)
+    b = context_sweep(B200_LLAMA70B)
+    gains = [rb.tok_per_watt / rh.tok_per_watt for rh, rb in zip(h, b)]
+    assert all(1.45 <= g <= 1.85 for g in gains)
+    # §3.1: the advantage narrows at long context (idle-power share grows)
+    assert gains[-1] < gains[1]
+
+
+@settings(max_examples=50, deadline=None)
+@given(capacity=st.integers(2 ** 12, 2 ** 24),
+       window=st.integers(128, 2 ** 18))
+def test_nmax_floor_properties(capacity, window):
+    n = n_max(capacity, window)
+    assert n >= 1
+    if n > 1:
+        assert n * window <= capacity
+        assert (n + 1) * window > capacity
+
+
+@settings(max_examples=30, deadline=None)
+@given(window=st.sampled_from([2048, 4096, 8192, 16384, 32768]))
+def test_law_monotone(window):
+    a = H100_LLAMA70B.tok_per_watt_at_window(window)
+    b = H100_LLAMA70B.tok_per_watt_at_window(window * 2)
+    assert b < a

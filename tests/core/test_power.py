@@ -1,0 +1,64 @@
+"""Eq. 1 logistic power model vs the paper's measured/stated values."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.power import (B200_POWER, GB200_POWER, H100_POWER, H200_POWER,
+                              PowerModel)
+from repro.core.hardware import B200, GB200, H100, H200
+
+
+# Paper Table 1 P_sat column (H100): P(n_max) at each context window.
+H100_PSAT = [(512, 598), (256, 593), (128, 583), (64, 557), (32, 507),
+             (16, 435), (8, 369)]
+
+
+@pytest.mark.parametrize("b,expected", H100_PSAT)
+def test_h100_table1_psat(b, expected):
+    assert H100_POWER.power_w(b) == pytest.approx(expected, rel=0.005)
+
+
+def test_h100_calibration_points():
+    """Chung et al.: ~300 W at b=1, ~600 W at b=128 (3% fit error)."""
+    assert H100_POWER.power_w(1) == pytest.approx(311, rel=0.03)
+    assert H100_POWER.power_w(128) == pytest.approx(583, rel=0.03)
+
+
+def test_half_saturation():
+    """Paper: power saturates around 2^4.2 ~ 18 concurrent sequences."""
+    assert H100_POWER.saturation_b() == pytest.approx(18.4, rel=0.01)
+    mid = H100_POWER.power_w(H100_POWER.saturation_b())
+    assert mid == pytest.approx((300 + 600) / 2, rel=0.01)
+
+
+def test_tdp_fractions():
+    """Appendix A: P_idle = 0.43 TDP, P_nom = 0.86 TDP for projections."""
+    for chip, pm in [(H200, H200_POWER), (B200, B200_POWER),
+                     (GB200, GB200_POWER)]:
+        assert pm.p_idle_w == pytest.approx(0.43 * chip.tdp_w, rel=0.01)
+        assert pm.p_nom_w == pytest.approx(0.86 * chip.tdp_w, rel=0.01)
+
+
+def test_idle_floor():
+    assert H100_POWER.power_w(0) == 300.0
+    assert H100_POWER.power_w(-3) == 300.0
+
+
+@settings(max_examples=50, deadline=None)
+@given(b1=st.floats(0.5, 4096), b2=st.floats(0.5, 4096))
+def test_monotone_in_concurrency(b1, b2):
+    lo, hi = sorted([b1, b2])
+    assert H100_POWER.power_w(lo) <= H100_POWER.power_w(hi) + 1e-9
+
+
+@settings(max_examples=50, deadline=None)
+@given(b=st.floats(0, 1e6))
+def test_bounded(b):
+    p = float(H100_POWER.power_w(b))
+    assert 300.0 - 1e-6 <= p <= 600.0 + 1e-6
+
+
+def test_from_tdp_fraction_roundtrip():
+    pm = PowerModel.from_tdp_fraction(H100)
+    assert pm.p_idle_w == pytest.approx(301.0, rel=0.01)
+    assert pm.p_nom_w == pytest.approx(602.0, rel=0.01)

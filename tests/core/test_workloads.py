@@ -1,0 +1,42 @@
+"""Workload reconstructions vs the statistics the paper states."""
+import pytest
+
+from repro.core.workloads import AGENT, AZURE, LMSYS
+
+
+def test_azure_stats():
+    # §7: "89% of Azure Conversations requests fit within 4K tokens"
+    assert AZURE.frac_total_leq(4096) == pytest.approx(0.89, abs=0.015)
+    # reverse-derived from Table 3: fleet tok/s / lambda ~ 325 output tokens
+    assert AZURE.mean_output == pytest.approx(325, rel=0.03)
+
+
+def test_lmsys_stats():
+    # Table 3: B_short = 1.5K must actually split the traffic
+    frac = LMSYS.frac_total_leq(1536)
+    assert 0.6 < frac < 0.95
+    assert LMSYS.mean_output == pytest.approx(136, rel=0.06)
+
+
+def test_agent_stats():
+    # §7: "74% of requests fit within 8K tokens ... p99 ~ 32K"
+    assert AGENT.frac_total_leq(8192) == pytest.approx(0.74, abs=0.04)
+    assert AGENT.quantile_total(0.99) == pytest.approx(32768, rel=0.25)
+
+
+def test_split_consistency():
+    for wl in (AZURE, LMSYS, AGENT):
+        s = wl.split_by_total(4096)
+        assert s["short"]["frac"] + s["long"]["frac"] == pytest.approx(1.0)
+        if s["long"]["frac"]:
+            assert s["long"]["mean_context"] > s["short"]["mean_context"]
+        total_out = (s["short"]["frac"] * s["short"]["mean_output"]
+                     + s["long"]["frac"] * s["long"]["mean_output"])
+        assert total_out == pytest.approx(wl.mean_output, rel=0.01)
+
+
+def test_sampling_deterministic():
+    a = AZURE.sample_requests(100, seed=3)
+    b = AZURE.sample_requests(100, seed=3)
+    assert (a == b).all()
+    assert (a > 0).all()

@@ -1,0 +1,120 @@
+"""Sharding-rule unit tests against a stub 16x16 mesh (no devices needed:
+the rules only consult mesh.shape / axis_names)."""
+import types
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch.sharding import (batch_specs, cache_specs, param_specs,
+                                   pure_dp)
+from repro.launch.shapes import SHAPES, input_specs
+from repro.models import model as M
+
+MESH = types.SimpleNamespace(shape={"data": 16, "model": 16},
+                             axis_names=("data", "model"))
+MESH3 = types.SimpleNamespace(shape={"pod": 2, "data": 16, "model": 16},
+                              axis_names=("pod", "data", "model"))
+
+
+def _specs(arch, mode):
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(0),
+                                                  cfg))
+    return cfg, shapes, param_specs(cfg, shapes, MESH, mode=mode)
+
+
+def _flat(specs):
+    return {("/".join(str(getattr(p, "key", p)) for p in path)): s
+            for path, s in jax.tree_util.tree_flatten_with_path(
+                specs, is_leaf=lambda x: isinstance(x, P))[0]}
+
+
+def test_divisibility_always_respected():
+    """No spec may assign an axis to a non-dividing dim (GSPMD would
+    reject the program)."""
+    for arch in ("yi-6b", "grok-1-314b", "whisper-medium", "zamba2-2.7b",
+                 "command-r-plus-104b"):
+        cfg, shapes, specs = _specs(arch, "train")
+        flat_shapes = _flat(jax.tree.map(
+            lambda s: P(*[None] * len(s.shape)), shapes))  # structure only
+        leaves = jax.tree_util.tree_flatten_with_path(shapes)[0]
+        spec_map = _flat(specs)
+        for path, leaf in leaves:
+            key = "/".join(str(getattr(p, "key", p)) for p in path)
+            spec = spec_map[key]
+            for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 8):
+                if ax is None:
+                    continue
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                size = 1
+                for a in axes:
+                    size *= MESH.shape[a]
+                assert dim % size == 0, (arch, key, leaf.shape, spec)
+
+
+def test_serve_mode_drops_fsdp_for_small_models():
+    _, _, train = _specs("llava-next-34b", "train")   # 34B: FSDP active
+    _, _, serve = _specs("llava-next-34b", "serve")   # 4.3 GB/chip: TP only
+    tr, sv = _flat(train), _flat(serve)
+    k = "unit/b0_attn/wq"
+    assert tr[k] == P(None, "data", "model")   # stacked + FSDP + TP
+    assert sv[k] == P(None, None, "model")     # TP only
+    # mid-size train (<8B): TP-only even in training
+    _, _, yi_train = _specs("yi-6b", "train")
+    assert _flat(yi_train)[k] == P(None, None, "model")
+
+
+def test_serve_mode_keeps_fsdp_for_huge_models():
+    _, _, serve = _specs("grok-1-314b", "serve")
+    sv = _flat(serve)
+    assert sv["unit/b0_attn/wq"] == P(None, "data", "model")
+
+
+def test_pure_dp_for_small_training():
+    cfg, shapes, specs = _specs("rwkv6-1.6b", "train")
+    assert pure_dp(cfg, MESH)
+    assert all(s == P() for s in jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, P)))
+    assert not pure_dp(get_config("yi-6b"), MESH)
+
+
+def test_moe_expert_parallel_vs_tp():
+    _, _, granite = _specs("granite-moe-1b-a400m", "serve")
+    g = _flat(granite)
+    # 32 experts % 16 == 0 -> expert parallel
+    assert g["unit/b1_moe/w_up"] == P(None, "model", None, None)
+    _, _, grok = _specs("grok-1-314b", "serve")
+    k = _flat(grok)
+    # 8 experts < 16 -> TP inside expert ffn (+FSDP: grok is huge)
+    assert k["unit/b1_moe/w_up"] == P(None, None, "data", "model")
+
+
+def test_cache_specs_modes():
+    for arch, shape_name, expect in [
+        # kv=32 divides model -> heads sharded
+        ("zamba2-2.7b", "decode_32k", P(None, ("data",), None, "model",
+                                        None)),
+        # kv=4 does not divide 16 -> sequence sharded on model
+        ("yi-6b", "decode_32k", P(None, ("data",), "model", None, None)),
+        # batch=1 -> context parallelism on data(+model)
+        ("h2o-danube-3-4b", "long_500k", P(None, None, ("data", "model"),
+                                           None, None)),
+    ]:
+        cfg = get_config(arch)
+        shape = SHAPES[shape_name]
+        cache = input_specs(cfg, shape)["cache"]
+        specs = cache_specs(cfg, cache, MESH, batch=shape.global_batch)
+        flat = _flat(specs)
+        key = next(k for k in flat if k.endswith("attn/k"))
+        assert flat[key] == expect, (arch, flat[key])
+
+
+def test_batch_specs():
+    assert batch_specs(MESH, 256) == P(("data",))
+    assert batch_specs(MESH3, 256) == P(("pod", "data"))
+    assert batch_specs(MESH, 1) == P(None)
+    assert batch_specs(MESH, 256, wide=True) == P(("data", "model"))
+    # 256 does not divide pod*data*model=512 -> falls back
+    assert batch_specs(MESH3, 256, wide=True) == P(("pod", "data"))

@@ -1,0 +1,71 @@
+"""flash_attention (chunked online softmax) vs direct softmax oracle."""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import flash_attention
+
+
+def direct_attention(q, k, v, *, causal=True, window=0):
+    B, S, H, D = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qh = q.reshape(B, S, K, G, D).astype(jnp.float32)
+    s = jnp.einsum("bskgd,btkd->bkgst", qh, k.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    q_pos, k_pos = jnp.arange(S)[:, None], jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, H, D)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    B=st.integers(1, 2), S=st.sampled_from([1, 7, 64, 130]),
+    K=st.sampled_from([1, 2]), G=st.sampled_from([1, 3]),
+    D=st.sampled_from([8, 32]),
+    window=st.sampled_from([0, 16]),
+    qc=st.sampled_from([16, 64]),
+)
+def test_flash_vs_direct(B, S, K, G, D, window, qc):
+    H = K * G
+    rng = jax.random.PRNGKey(B * 1000 + S)
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, K, D))
+    v = jax.random.normal(ks[2], (B, S, K, D))
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          q_chunk=qc, kv_chunk=qc)
+    ref = direct_attention(q, k, v, causal=True, window=window)
+    assert jnp.allclose(out, ref, atol=2e-5), float(jnp.abs(out - ref).max())
+
+
+def test_bfloat16_path():
+    rng = jax.random.PRNGKey(0)
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (2, 96, 8, 32), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (2, 96, 4, 32), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (2, 96, 4, 32), jnp.bfloat16)
+    out = flash_attention(q, k, v, q_chunk=32, kv_chunk=32)
+    ref = direct_attention(q.astype(jnp.float32), k.astype(jnp.float32),
+                           v.astype(jnp.float32))
+    assert out.dtype == jnp.bfloat16
+    assert jnp.allclose(out.astype(jnp.float32), ref, atol=3e-2)
+
+
+def test_non_causal_cross():
+    rng = jax.random.PRNGKey(1)
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (1, 33, 4, 16))
+    k = jax.random.normal(ks[1], (1, 50, 4, 16))
+    v = jax.random.normal(ks[2], (1, 50, 4, 16))
+    out = flash_attention(q, k, v, causal=False)
+    ref = direct_attention(q, k, v, causal=False)
+    assert jnp.allclose(out, ref, atol=2e-5)

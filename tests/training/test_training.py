@@ -1,0 +1,62 @@
+"""Optimizer, checkpointing, and a real convergence run (~100-step)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import batch_iterator
+from repro.models import model as M
+from repro.training import (AdamW, load_checkpoint, make_train_step,
+                            save_checkpoint, train_loop)
+
+
+def test_adamw_quadratic():
+    opt = AdamW(lr=0.1, weight_decay=0.0, warmup_steps=0, total_steps=100)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(100):
+        grads = {"w": 2 * params["w"]}
+        params, state = opt.update(grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 0.3
+
+
+def test_grad_clip():
+    opt = AdamW(lr=1e-3, grad_clip=1.0, warmup_steps=0)
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    new, _ = opt.update({"w": jnp.full(3, 1e6)}, state, params)
+    assert float(jnp.abs(new["w"]).max()) < 1.0
+
+
+def test_lr_schedule():
+    opt = AdamW(lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(opt.schedule(0)) == 0.0
+    assert float(opt.schedule(10)) == pytest.approx(1.0)
+    assert float(opt.schedule(100)) == pytest.approx(0.1, rel=0.01)
+
+
+def test_loss_decreases_100_steps():
+    """Markov-structured synthetic data is learnable: ~1.5+ nats in 100
+    steps on a tiny model (deliverable-b training driver, miniaturized)."""
+    cfg = get_config("granite-3-8b").reduced()
+    it = ({k: jnp.asarray(v) for k, v in b.items()}
+          for b in batch_iterator(cfg, batch=4, seq=32))
+    _, _, hist = train_loop(cfg, steps=100, batch_iter=it,
+                            opt=AdamW(lr=2e-3, total_steps=100),
+                            log_every=25)
+    assert hist[-1]["loss"] < hist[0]["loss"] - 1.0, hist
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_config("yi-6b").reduced()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    path = str(tmp_path / "ckpt.npz")
+    save_checkpoint(path, params, step=17)
+    template = jax.tree.map(lambda x: jnp.zeros_like(x), params)
+    restored, step = load_checkpoint(path, template)
+    assert step == 17
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
