@@ -1,0 +1,75 @@
+"""Analytical vs simulated fleet tok/W (the measured side of Tables 3/4).
+
+Runs the event-driven fleet simulator (serving.fleetsim) for every
+(workload x topology) cell on the calibrated H100 Llama-70B profile and
+puts the measured steady-state tok/W next to the closed-form core.fleet
+prediction it was provisioned from.  `simulated` is the decode-only
+measurement (like-for-like with Eq. 4); `all_in` additionally meters the
+prefill compute and idle power the analytical model ignores — the gap is
+the honest price of serving, TokenPowerBench-style.
+
+Standalone:  PYTHONPATH=src python benchmarks/fleet_sim_bench.py
+             [--n-requests N] [--quick]
+Harness:     PYTHONPATH=src python -m benchmarks.run --only fleet_sim
+"""
+import sys
+
+from repro.core.modelspec import LLAMA31_70B
+from repro.core.profiles import H100_LLAMA70B
+from repro.core.workloads import AGENT, AZURE, LMSYS
+from repro.serving import simulate_topology
+
+# per-workload split boundary (paper: Azure 4K, LMSYS 1.5K, Agent 8K)
+B_SHORT = {"azure-conv": 4096, "lmsys-chat": 1536, "agent-heavy": 8192}
+TOPOLOGIES = ("homo", "two_pool", "fleetopt")
+
+
+def run(n_requests: int = 10_000, seed: int = 0):
+    rows = []
+    for wl in (AZURE, LMSYS, AGENT):
+        for kind in TOPOLOGIES:
+            cell = simulate_topology(
+                kind, wl, H100_LLAMA70B, LLAMA31_70B,
+                b_short=B_SHORT[wl.name], n_requests=n_requests, seed=seed)
+            f = cell.report["fleet"]
+            rows.append(dict(cell.row(),
+                             occupancy={r: s["occupancy"]
+                                        for r, s in cell.report.items()
+                                        if r != "fleet"},
+                             prefill_energy_frac=f["prefill_energy_frac"],
+                             tokens_per_s=f["tokens_per_s"]))
+    az = {r["topology"]: r["simulated"] for r in rows
+          if r["workload"] == "azure-conv"}
+    ratio = az["fleetopt"] / az["homo"] if az["homo"] else float("nan")
+    derived = (f"simulated fleetopt/homo on Azure = {ratio:.2f}x "
+               f"(paper analytical ~2.5x; acceptance >= 2x)")
+    return rows, derived
+
+
+def main(argv=None) -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n-requests", type=int, default=10_000)
+    ap.add_argument("--quick", action="store_true",
+                    help="1k-request smoke run (CI)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    n = 1000 if args.quick else args.n_requests
+    rows, derived = run(n_requests=n, seed=args.seed)
+    hdr = (f"{'workload':12s} {'topology':9s} {'analytic':>8s} {'simulated':>9s}"
+           f" {'delta%':>7s} {'all-in':>7s} {'ttft_p99':>9s} {'migr':>5s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['workload']:12s} {r['topology']:9s} {r['analytical']:8.2f} "
+              f"{r['simulated']:9.2f} {r['delta_pct']:7.1f} {r['all_in']:7.2f} "
+              f"{r['ttft_p99_s']:9.2f} {r['migrations']:5d}")
+    print(derived)
+    az = {r["topology"]: r["simulated"] for r in rows
+          if r["workload"] == "azure-conv"}
+    if az["fleetopt"] < 2.0 * az["homo"]:
+        sys.exit("ACCEPTANCE FAIL: simulated fleetopt < 2x homo on Azure")
+
+
+if __name__ == "__main__":
+    main()

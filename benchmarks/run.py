@@ -14,12 +14,13 @@ RESULTS = pathlib.Path(__file__).resolve().parent / "results"
 
 
 def _suites():
-    from . import (beyond_paper, engine_bench, extra_sweeps, kernel_bench,
-                   roofline_report, table1_context_law, table2_model_archs,
-                   table3_fleet_topology, table4_semantic_routing,
-                   table5_gpu_generations, table6_archetypes,
-                   table7_power_params)
+    from . import (beyond_paper, engine_bench, extra_sweeps, fleet_sim_bench,
+                   kernel_bench, roofline_report, table1_context_law,
+                   table2_model_archs, table3_fleet_topology,
+                   table4_semantic_routing, table5_gpu_generations,
+                   table6_archetypes, table7_power_params)
     return {
+        "fleet_sim": fleet_sim_bench.run,
         "table1_context_law": table1_context_law.run,
         "table2_model_archs": table2_model_archs.run,
         "table3_fleet_topology": table3_fleet_topology.run,

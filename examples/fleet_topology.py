@@ -1,10 +1,12 @@
-"""Fleet topology design space (paper Tables 3-6).
+"""Fleet topology design space (paper Tables 3-6) + measured cross-check.
 
 Evaluates Homo / Pool / FleetOpt on H100 & B200 over all three workload
 archetypes, decomposes topology x generation gains (§4.2), compares
-semantic vs context routing (§5.1), and sweeps quantization (§5.2).
+semantic vs context routing (§5.1), and closes with the event-driven
+fleet simulator measuring the Azure topologies end-to-end (serving
+.fleetsim) against the closed-form sizing that provisioned them.
 
-  PYTHONPATH=src python examples/fleet_topology.py
+  PYTHONPATH=src python examples/fleet_topology.py [--sim-requests N]
 """
 from repro.core import (AGENT, AZURE, LMSYS, B200_LLAMA70B_FLEET,
                         H100_LLAMA70B, FleetOpt, Homogeneous, Semantic,
@@ -15,7 +17,28 @@ from repro.core.modelspec import LLAMA31_8B, LLAMA31_70B
 from repro.core.power import H100_POWER
 
 
-def main():
+def simulated_crosscheck(n_requests: int = 4000) -> None:
+    """Measure the Azure topologies by actually running the fleet."""
+    from repro.serving import simulate_topology
+
+    print(f"\n=== measured (fleet simulator, {n_requests} requests) ===")
+    sim_tpw = {}
+    for kind in ("homo", "two_pool", "fleetopt"):
+        cell = simulate_topology(kind, AZURE, H100_LLAMA70B, LLAMA31_70B,
+                                 b_short=4096, n_requests=n_requests)
+        f = cell.report["fleet"]
+        sim_tpw[kind] = cell.sim_decode_tok_per_watt
+        print(f"  {kind:9s} analytical {cell.analytical_tok_per_watt:5.2f}"
+              f" | simulated {cell.sim_decode_tok_per_watt:5.2f} tok/W"
+              f" ({cell.delta_pct:+.1f}%)"
+              f" | all-in {cell.sim_tok_per_watt:5.2f}"
+              f" | TTFT p99 {f.get('ttft_p99_s', 0.0):.2f}s"
+              f" | {f['migrations']} migrations")
+    print(f"  measured fleetopt/homo gain: "
+          f"{sim_tpw['fleetopt'] / sim_tpw['homo']:.2f}x")
+
+
+def main(sim_requests: int = 4000):
     tpw = {}
     print("=== Table 3: fleet tok/W ===")
     for wl, bs in ((AZURE, 4096), (LMSYS, 1536), (AGENT, 8192)):
@@ -55,6 +78,11 @@ def main():
     print(f"  semantic routing: {sem.tok_per_watt:.2f} tok/W "
           f"({sem.instances} instances; quality question, not tok/W — §5.1)")
 
+    simulated_crosscheck(n_requests=sim_requests)
+
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sim-requests", type=int, default=4000)
+    main(sim_requests=ap.parse_args().sim_requests)

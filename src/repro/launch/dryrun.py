@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from repro.configs import get_config, list_archs
 from repro.launch import hlo_analysis
 from repro.launch.mesh import data_axes, make_production_mesh
+from repro.models.compat import cost_analysis as compat_cost_analysis, set_mesh
 from repro.launch.shapes import SHAPES, applicability, input_specs
 from repro.launch.sharding import (batch_specs, cache_specs, param_specs,
                                    pure_dp, to_shardings)
@@ -138,7 +139,7 @@ class SkipPair(Exception):
 
 
 def _cost_vector(compiled) -> dict:
-    cost = compiled.cost_analysis() or {}
+    cost = compat_cost_analysis(compiled)
     coll = hlo_analysis.collective_bytes(compiled.as_text())
     return dict(flops=float(cost.get("flops", 0.0)),
                 bytes_accessed=float(cost.get("bytes accessed", 0.0)),
@@ -197,7 +198,7 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
     t0 = time.time()
     try:
         mesh = make_production_mesh(multi_pod=multi_pod)
-        with jax.sharding.set_mesh(mesh):   # ambient mesh for constrain()
+        with set_mesh(mesh):   # ambient mesh for constrain()
             cfg = get_config(arch)
             fn, args = build_step(arch, shape_name, mesh, cfg=cfg)
             lowered = fn.lower(*args)

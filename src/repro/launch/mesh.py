@@ -8,18 +8,16 @@ from __future__ import annotations
 
 
 def make_production_mesh(*, multi_pod: bool = False):
-    import jax
+    from repro.models.compat import make_mesh
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(model: int = 1, data: int = 1):
     """Small mesh over whatever devices exist (tests / CPU demos)."""
-    import jax
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.models.compat import make_mesh
+    return make_mesh((data, model), ("data", "model"))
 
 
 def data_axes(mesh) -> tuple:

@@ -5,6 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .compat import get_abstract_mesh
+
 
 def dtype_of(cfg) -> jnp.dtype:
     return jnp.dtype(cfg.dtype)
@@ -51,7 +53,7 @@ BATCH_AXES_OVERRIDE = None
 
 def batch_axes() -> tuple:
     """Data-parallel axes of the ambient mesh (empty tuple if no mesh)."""
-    m = jax.sharding.get_abstract_mesh()
+    m = get_abstract_mesh()
     if m is None or m.empty:
         return ()
     if BATCH_AXES_OVERRIDE is not None:
@@ -67,7 +69,7 @@ def constrain(x: jax.Array, *spec) -> jax.Array:
     GSPMD doesn't trade batch parallelism for feature sharding on the big
     f32 loss/activation tensors (see EXPERIMENTS.md §Perf, iteration 0).
     """
-    m = jax.sharding.get_abstract_mesh()
+    m = get_abstract_mesh()
     if m is None or m.empty:
         return x
     names = set(m.axis_names)

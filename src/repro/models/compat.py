@@ -1,0 +1,74 @@
+"""JAX version compatibility shims for the ambient-mesh API.
+
+The ambient ("abstract") mesh API moved between JAX releases:
+
+  * 0.5.x+ — `jax.sharding.get_abstract_mesh()` / `jax.sharding.set_mesh()`
+    (earlier spelled `use_mesh`), and `jax.make_mesh` grew an `axis_types`
+    kwarg.
+  * 0.4.x — none of those exist; the ambient mesh is the thread-resources
+    physical mesh installed by `with mesh:`.
+
+Everything in models/ and launch/ that needs the ambient mesh goes through
+this module so the rest of the codebase is version-agnostic.  Callers treat
+the return value of `get_abstract_mesh()` uniformly: it is either None or a
+mesh-like object with `.empty`, `.axis_names` and `.shape`.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Sequence
+
+import jax
+
+
+def get_abstract_mesh() -> Any:
+    """The ambient mesh, or None when none is installed.
+
+    On 0.5.x+ this is `jax.sharding.get_abstract_mesh()` (an AbstractMesh,
+    possibly empty); on 0.4.x it is the thread-resources physical mesh set
+    by `with mesh:` (a Mesh, possibly empty).  Both expose `.empty`,
+    `.axis_names` and `.shape`, which is all our call sites use.
+    """
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is not None:
+        return fn()
+    from jax._src import mesh as _mesh_lib
+    return _mesh_lib.thread_resources.env.physical_mesh
+
+
+def set_mesh(mesh) -> contextlib.AbstractContextManager:
+    """Context manager installing `mesh` as the ambient mesh.
+
+    0.5.x+: `jax.sharding.set_mesh` (or `use_mesh` on the releases that
+    spelled it that way).  0.4.x: `with mesh:` installs the physical mesh,
+    which `with_sharding_constraint` resolves against.
+    """
+    for name in ("set_mesh", "use_mesh"):
+        fn = getattr(jax.sharding, name, None)
+        if fn is not None:
+            return fn(mesh)
+    return mesh  # Mesh is itself a context manager on 0.4.x
+
+
+def cost_analysis(compiled) -> dict:
+    """Flat cost dict from a compiled executable.
+
+    jaxlib 0.4.x returns a list of per-device dicts (one entry on
+    single-controller runs); 0.5.x+ returns the dict directly.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              **kwargs):
+    """`jax.make_mesh` with Auto axis_types where the release supports it."""
+    if hasattr(jax.sharding, "AxisType"):
+        kwargs.setdefault(
+            "axis_types",
+            (jax.sharding.AxisType.Auto,) * len(axis_names))
+    else:
+        kwargs.pop("axis_types", None)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)

@@ -138,7 +138,8 @@ def _n_dispatch_groups(T: int) -> int:
     all-to-all on the (G, E, C, d) buffer (GSPMD cannot shard a *global*
     sort — it replicates it, an ~80 GiB/device disaster at train_4k)."""
     from .common import batch_axes
-    m = jax.sharding.get_abstract_mesh()
+    from .compat import get_abstract_mesh
+    m = get_abstract_mesh()
     g = 1
     if m is not None and not m.empty:
         for a in batch_axes():   # includes `model` under pure-DP mappings
@@ -242,7 +243,8 @@ def apply_moe(params, cfg, x, *, return_aux: bool = False):
 
 
 def _model_axis_size() -> int:
-    m = jax.sharding.get_abstract_mesh()
+    from .compat import get_abstract_mesh
+    m = get_abstract_mesh()
     if m is None or m.empty or "model" not in m.axis_names:
         return 1
     return m.shape["model"]

@@ -3,13 +3,23 @@
 Every engine iteration is charged P(b) * tau analytically (this container
 has no power sensors; tau comes from the calibrated decode roofline, P(b)
 from the logistic power model).  The integration test in
-tests/serving/test_energy.py checks the meter converges to the analytical
+tests/serving/test_serving.py checks the meter converges to the analytical
 tok/W of core.tokenomics under the same operating point — closing the loop
 between the executable system and the paper's closed-form law.
+
+Steady-state measurement window: a fleet simulation starts from an empty
+fleet and drains at the end, but the analytical Eq. 4 number describes
+steady state.  Setting `measure_t0`/`measure_t1` makes the meter
+additionally accumulate every charge whose interval midpoint falls inside
+the window into the `m_*` counters, so ramp-in and drain-out transients
+can be excluded from the measured tok/W (the totals are always kept too).
+With the window left at its (0, inf) default the `m_*` counters simply
+mirror the totals.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 
 from repro.core.profiles import BaseProfile
 
@@ -19,33 +29,72 @@ class EnergyMeter:
     profile: BaseProfile
     joules: float = 0.0
     idle_joules: float = 0.0
+    prefill_joules: float = 0.0
     tokens: int = 0
     prefill_tokens: int = 0
     sim_time_s: float = 0.0
+    # steady-state measurement window + windowed counters
+    measure_t0: float = 0.0
+    measure_t1: float = math.inf
+    m_tokens: int = 0
+    m_joules: float = 0.0
+    m_prefill_joules: float = 0.0
+    m_idle_joules: float = 0.0
+    # whether the latest decode charge landed inside the window (engines
+    # use this to attribute in-window tokens to slots for eviction backout)
+    last_charge_in_window: bool = True
+
+    def _in_window(self, dt_s: float) -> bool:
+        mid = self.sim_time_s + 0.5 * dt_s
+        return self.measure_t0 <= mid <= self.measure_t1
 
     def charge_decode_step(self, n_active: int, mean_context: float) -> float:
         """Charge one continuous-batching iteration; returns tau (s)."""
         tau_s = float(self.profile.roofline.tau_ms(max(n_active, 1),
                                                    mean_context)) * 1e-3
         power = self.profile.power_w(n_active)
+        self.last_charge_in_window = self._in_window(tau_s)
+        if self.last_charge_in_window:
+            self.m_tokens += n_active
+            self.m_joules += power * tau_s
         self.joules += power * tau_s
         self.tokens += n_active
         self.sim_time_s += tau_s
         return tau_s
 
     def charge_prefill(self, n_tokens: int, *, mfu: float = 0.8,
-                       streamed_params: float = 1e9) -> float:
+                       streamed_params: float = 1e9,
+                       overlap_s: float = 0.0) -> float:
+        """Charge prefill compute.  Energy is always work-proportional;
+        `overlap_s` is decode-iteration time the chunk hides behind
+        (chunked prefill piggybacks compute-bound prompt processing on the
+        memory-bound decode pass), so only the excess advances the clock."""
         flops = 2.0 * streamed_params * n_tokens
         t = flops / (self.profile.tp * self.profile.chip.peak_bf16_flops
                      * mfu)
-        self.joules += self.profile.power_w(1) * t
+        e = self.profile.power_w(1) * t
+        dt = max(t - overlap_s, 0.0)
+        if self._in_window(dt):
+            self.m_joules += e
+            self.m_prefill_joules += e
+        self.joules += e
+        self.prefill_joules += e
         self.prefill_tokens += n_tokens
-        self.sim_time_s += t
-        return t
+        self.sim_time_s += dt
+        return dt
 
     def charge_idle(self, dt_s: float) -> None:
-        self.joules += self.profile.power_model.p_idle_w * dt_s
-        self.idle_joules += self.profile.power_model.p_idle_w * dt_s
+        e = self.profile.power_model.p_idle_w * dt_s
+        # idle skips can span seconds: pro-rate the in-window share exactly
+        # (decode/prefill charges are ms-scale, midpoint-tested instead)
+        overlap = max(0.0, min(self.measure_t1, self.sim_time_s + dt_s)
+                      - max(self.measure_t0, self.sim_time_s))
+        if overlap > 0:
+            e_in = self.profile.power_model.p_idle_w * overlap
+            self.m_joules += e_in
+            self.m_idle_joules += e_in
+        self.joules += e
+        self.idle_joules += e
         self.sim_time_s += dt_s
 
     @property

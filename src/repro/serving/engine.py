@@ -9,79 +9,177 @@ serving one context window.  It owns:
     garbage, as real continuous-batching engines do);
   * an EnergyMeter charging every iteration P(b) * tau.
 
-Prefill runs per-request at admission and its K/V is spliced into the slab
-(the chunked-prefill interleave is modeled on the energy side only —
-see DESIGN.md §4).
+The engine runs in one of two modes:
+
+  model mode      — cfg/params given: real jitted prefill + decode over the
+                    slab; token streams are exact greedy generations
+                    (asserted against sequential decoding in
+                    tests/serving/test_serving.py).
+  analytical mode — cfg=None: no neural net; token ids come from a
+                    deterministic LCG stream and only the *scheduler* and
+                    the EnergyMeter run.  This is what the fleet simulator
+                    (serving/fleetsim.py) instantiates by the dozen: a tick
+                    is a handful of vectorized numpy ops over the slot
+                    arrays, so 16 pools x 256 slots x 10k requests finish
+                    in seconds.
+
+All post-decode bookkeeping (token emission, position advance, completion,
+window-ceiling handling) is slot-batched over numpy arrays — there is no
+per-slot Python loop on the hot path; Python-level loops only touch the
+(rare) slots that complete or migrate on a given iteration.
+
+Prefill: in model mode K/V is computed per-request at admission and spliced
+into the slab.  Energy/time accounting supports two policies: immediate
+(the whole prompt charged at admission — legacy behaviour) and chunked
+interleave (`prefill_chunk` tokens ride along each decode iteration, the
+Sarathi-style schedule; the request holds its slot but emits no tokens
+until its prefill budget drains, which is what makes simulated TTFT honest
+under load).
 """
 from __future__ import annotations
 
-import dataclasses
 from collections import deque
 from typing import Deque, Dict, List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.profiles import BaseProfile
-from repro.models import model as M
-from repro.models.spec import ArchConfig
 
 from .energy import EnergyMeter
-from .request import Request
+from .request import Request, latency_percentiles
+
+_LCG_A, _LCG_C = 1664525, 1013904223   # Numerical Recipes LCG
 
 
 class PoolEngine:
-    def __init__(self, cfg: ArchConfig, params, *, window: int,
+    def __init__(self, cfg, params, *, window: int,
                  profile: BaseProfile, n_slots: Optional[int] = None,
-                 name: str = "pool", rng_seed: int = 0):
+                 name: str = "pool", rng_seed: int = 0,
+                 prefill_chunk: Optional[int] = None,
+                 evict_on_overflow: bool = False,
+                 respect_arrival: bool = False,
+                 streamed_params: Optional[float] = None,
+                 vocab: int = 32000):
         self.cfg, self.params = cfg, params
         self.window = window
         self.name = name
         self.profile = profile
         self.n_slots = n_slots if n_slots is not None \
             else max(profile.n_max(window), 1)
+        self.prefill_chunk = prefill_chunk
+        self.evict_on_overflow = evict_on_overflow
+        self.respect_arrival = respect_arrival
+        self.vocab = vocab
         self.meter = EnergyMeter(profile)
         self.queue: Deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * self.n_slots
-        self.pos = np.zeros(self.n_slots, np.int32)       # next write position
-        self.tokens = np.zeros(self.n_slots, np.int64)    # last emitted token
+        n = self.n_slots
+        self.pos = np.zeros(n, np.int32)            # next write position
+        self.tokens = np.zeros(n, np.int64)         # last emitted token
+        self.gen_count = np.zeros(n, np.int32)      # emitted tokens per slot
+        self.m_gen = np.zeros(n, np.int32)          # ...metered in-window
+        self.max_new = np.zeros(n, np.int32)
+        self.prefill_left = np.zeros(n, np.int64)   # unmetered prefill tokens
+        self._active = np.zeros(n, bool)
         self.preempted = 0
-        self.cache = M.init_cache(cfg, self.n_slots, window)
-        self._step = jax.jit(
+        self.slot_seconds = 0.0                     # occupancy integral
+        self.completed: List[Request] = []
+        self.overflowed: List[Request] = []         # evicted at the window
+        if cfg is not None:
+            self._streamed_params = cfg.analytical_spec().streamed_params
+            self._init_model(cfg, params)
+        else:
+            if streamed_params is None:
+                raise ValueError("analytical mode needs streamed_params")
+            self._streamed_params = float(streamed_params)
+            self.cache = None
+            self._step_fn = self._prefill = None
+            self._gen_buf = None
+        self._seed = np.int64(rng_seed)
+
+    def _init_model(self, cfg, params) -> None:
+        import jax
+        from repro.models import model as M
+        self.cache = M.init_cache(cfg, self.n_slots, self.window)
+        self._step_fn = jax.jit(
             lambda p, t, c, pos: M.decode_step(p, cfg, t, c, pos))
         self._prefill = jax.jit(
             lambda p, toks: M.forward(p, cfg, {"tokens": toks},
                                       mode="prefill"))
-        self.completed: List[Request] = []
+        # exact token streams are kept per-slot; grown on demand in _admit
+        self._gen_buf = np.zeros((self.n_slots, 64), np.int64)
 
     # --- admission ------------------------------------------------------
     @property
     def n_active(self) -> int:
-        return sum(s is not None for s in self.slots)
+        return int(self._active.sum())
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue or self._active.any())
 
     def submit(self, req: Request) -> None:
         req.pool = self.name
         self.queue.append(req)
 
+    def _ready(self, req: Request) -> float:
+        return req.ready_time if req.ready_time is not None \
+            else req.arrival_time
+
+    def advance_to(self, t: float) -> None:
+        """Idle the engine forward to wall time t (idle power accrues)."""
+        if t > self.meter.sim_time_s:
+            self.meter.charge_idle(t - self.meter.sim_time_s)
+
     def _admit(self) -> None:
-        while self.queue and None in self.slots:
-            req = self.queue.popleft()
-            slot = self.slots.index(None)
-            prompt = jnp.asarray(req.prompt[None, :])
-            logits, cache, _ = self._prefill(self.params, prompt)
-            self.meter.charge_prefill(
-                req.prompt_len,
-                streamed_params=self.cfg.analytical_spec().streamed_params)
-            self._splice(cache, slot, req.prompt_len)
+        while self.queue and not self._active.all():
+            req = self.queue[0]
+            if self.respect_arrival \
+                    and self._ready(req) > self.meter.sim_time_s:
+                break
+            self.queue.popleft()
+            slot = int(np.flatnonzero(~self._active)[0])
+            plen = req.prompt_len
+            if self._prefill is not None:
+                import jax.numpy as jnp
+                prompt = jnp.asarray(req.prompt[None, :])
+                logits, cache, _ = self._prefill(self.params, prompt)
+                self._splice(cache, slot, plen)
+                first_tok = int(jnp.argmax(logits[0, -1]))
+                if self._gen_buf.shape[1] < req.max_new_tokens:
+                    grow = np.zeros((self.n_slots, req.max_new_tokens),
+                                    np.int64)
+                    grow[:, :self._gen_buf.shape[1]] = self._gen_buf
+                    self._gen_buf = grow
+                self._gen_buf[slot, 0] = first_tok
+            else:
+                # analytical mode: deterministic LCG token stream
+                first_tok = int((np.int64(req.rid) * _LCG_A + self._seed
+                                 + _LCG_C) % self.vocab)
             self.slots[slot] = req
-            self.pos[slot] = req.prompt_len
-            self.tokens[slot] = int(jnp.argmax(logits[0, -1]))
-            req.generated = [int(self.tokens[slot])]
-            req.first_token_time = self.meter.sim_time_s
+            self._active[slot] = True
+            self.pos[slot] = plen
+            self.max_new[slot] = req.max_new_tokens
+            if self.prefill_chunk:
+                # chunked interleave: prefill energy rides decode iterations
+                self.prefill_left[slot] = plen
+                self.gen_count[slot] = 0
+                self.tokens[slot] = first_tok  # emitted when prefill drains
+                req.generated = []
+            else:
+                self.meter.charge_prefill(
+                    plen, streamed_params=self._streamed_params)
+                self.prefill_left[slot] = 0
+                self.gen_count[slot] = 1
+                self.tokens[slot] = first_tok
+                req.generated = [first_tok]
+                req.n_generated = 1
+                req.first_token_time = self.meter.sim_time_s
 
     def _splice(self, prefill_cache, slot: int, plen: int) -> None:
         """Write a single-sequence prefill cache into slab slot `slot`."""
+        import jax
+
         def put(slab, piece):
             piece0 = piece[:, 0]  # drop the size-1 prefill batch axis
             if piece0.shape == slab.shape[:1] + slab.shape[2:]:
@@ -95,6 +193,13 @@ class PoolEngine:
 
     # --- preemption (paper §10.1: "KV-cache eviction under memory
     # pressure ... reduces achievable throughput") ------------------------
+    def _clear_slot(self, slot: int) -> None:
+        self.slots[slot] = None
+        self._active[slot] = False
+        self.prefill_left[slot] = 0
+        self.gen_count[slot] = 0
+        self.m_gen[slot] = 0
+
     def preempt(self, slot: int) -> None:
         """Evict a running request back to the queue (its KV is dropped;
         it will re-prefill on re-admission — the real cost of eviction)."""
@@ -104,7 +209,7 @@ class PoolEngine:
         req.generated = None      # restart generation on re-admission
         req.preemptions += 1
         self.queue.appendleft(req)
-        self.slots[slot] = None
+        self._clear_slot(slot)
         self.preempted += 1
 
     def shrink(self, new_slots: int) -> None:
@@ -116,53 +221,127 @@ class PoolEngine:
             _, victim = min(ages)
             self.preempt(victim)
 
+    def _evict_overflow(self, slot: int) -> None:
+        """FleetOpt migration: the request hit the pool window mid-flight.
+        Its decode work so far is wasted (it re-prefills elsewhere), so the
+        emitted tokens are backed out of the meter — mirroring the
+        analytical accounting in core.routing.FleetOpt.provision, where
+        migrated requests' short-pool output is subtracted from
+        tokens_per_s.  The energy stays: it was really spent."""
+        req = self.slots[slot]
+        # metered decode tokens only: the first token came from prefill;
+        # the windowed counter gives back exactly the slot's in-window share
+        self.meter.tokens -= max(int(self.gen_count[slot]) - 1, 0)
+        self.meter.m_tokens -= int(self.m_gen[slot])
+        req.generated = None
+        req.preemptions += 1
+        req.ready_time = self.meter.sim_time_s
+        self.overflowed.append(req)
+        self._clear_slot(slot)
+        self.preempted += 1
+
     # --- one continuous-batching iteration ------------------------------
+    def _next_tokens(self) -> np.ndarray:
+        """(n_slots,) next token per slot — jitted argmax in model mode,
+        LCG stream in analytical mode."""
+        if self._step_fn is not None:
+            import jax.numpy as jnp
+            toks = jnp.asarray(self.tokens[:, None])
+            pos = jnp.asarray(self.pos)
+            logits, self.cache = self._step_fn(self.params, toks,
+                                               self.cache, pos)
+            return np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        return (self.tokens * _LCG_A + _LCG_C + self._seed) % self.vocab
+
+    def _drain_prefill_chunk(self, overlap_s: float = 0.0) -> None:
+        """Meter up to `prefill_chunk` pending prefill tokens riding this
+        iteration; slots whose budget drains emit their first token.  The
+        first chunk hides behind this iteration's decode tau (`overlap_s`)
+        — compute-bound prefill piggybacking on the memory-bound decode."""
+        budget = self.prefill_chunk
+        pending = np.flatnonzero(self._active & (self.prefill_left > 0))
+        for i in pending:           # few slots are ever mid-prefill
+            if budget <= 0:
+                break
+            take = int(min(budget, self.prefill_left[i]))
+            self.meter.charge_prefill(
+                take, streamed_params=self._streamed_params,
+                overlap_s=overlap_s)
+            overlap_s = 0.0         # only one chunk rides each decode pass
+            self.prefill_left[i] -= take
+            budget -= take
+            if self.prefill_left[i] == 0:
+                req = self.slots[i]
+                self.gen_count[i] = 1
+                req.generated = [int(self.tokens[i])] \
+                    if self._gen_buf is None else [int(self._gen_buf[i, 0])]
+                req.n_generated = 1
+                req.first_token_time = self.meter.sim_time_s
+
     def step(self) -> int:
+        t_start = self.meter.sim_time_s
         self._admit()
-        n_act = self.n_active
-        if n_act == 0:
-            return 0
-        active = np.array([s is not None for s in self.slots])
-        toks = jnp.asarray(self.tokens[:, None])
-        pos = jnp.asarray(self.pos)
-        logits, self.cache = self._step(self.params, toks, self.cache, pos)
-        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
-        mean_ctx = float(self.pos[active].mean()) if active.any() else 0.0
-        self.meter.charge_decode_step(n_act, mean_ctx)
-        for i, req in enumerate(self.slots):
-            if req is None:
-                continue
-            req.generated.append(int(nxt[i]))
-            self.tokens[i] = nxt[i]
-            self.pos[i] += 1
-            if req.done or self.pos[i] >= self.window - 1:
-                req.finish_time = self.meter.sim_time_s
-                self.completed.append(req)
-                self.slots[i] = None
-        return n_act
+        # occupancy counts every held slot — including those still waiting
+        # on chunked prefill — for however long this iteration takes
+        n_occupied = int(self._active.sum())
+        dec = self._active & (self.prefill_left == 0)
+        n_dec = int(dec.sum())
+        tau = 0.0
+        if n_dec:
+            nxt = self._next_tokens()
+            mean_ctx = float(self.pos[dec].mean())
+            tau = self.meter.charge_decode_step(n_dec, mean_ctx)
+            # --- slot-batched bookkeeping (no per-slot Python here) ------
+            if self.meter.last_charge_in_window:
+                self.m_gen[dec] += 1
+            self.tokens[dec] = nxt[dec]
+            if self._gen_buf is not None:
+                self._gen_buf[dec, self.gen_count[dec]] = nxt[dec]
+            self.gen_count[dec] += 1
+            self.pos[dec] += 1
+            done = dec & (self.gen_count >= self.max_new)
+            at_ceiling = dec & ~done & (self.pos >= self.window - 1)
+            if not self.evict_on_overflow:
+                done |= at_ceiling      # legacy: truncate at the window
+            for i in np.flatnonzero(done):  # touches finishing slots only
+                self._finish(int(i))
+            if self.evict_on_overflow:
+                for i in np.flatnonzero(at_ceiling):
+                    self._evict_overflow(int(i))
+        if self.prefill_chunk:
+            self._drain_prefill_chunk(overlap_s=tau)
+        self.slot_seconds += n_occupied * (self.meter.sim_time_s - t_start)
+        return n_dec
+
+    def _finish(self, slot: int) -> None:
+        req = self.slots[slot]
+        n = int(self.gen_count[slot])
+        req.n_generated = n
+        if self._gen_buf is not None:
+            req.generated = [int(t) for t in self._gen_buf[slot, :n]]
+        else:
+            req.generated = None    # analytical mode: ids are synthetic
+        req.finish_time = self.meter.sim_time_s
+        self.completed.append(req)
+        self._clear_slot(slot)
 
     def run_until_drained(self, max_iters: int = 100_000) -> None:
         it = 0
-        while (self.queue or self.n_active) and it < max_iters:
+        while self.busy and it < max_iters:
+            if self.respect_arrival and self.n_active == 0 and self.queue:
+                # event-driven idle skip: jump to the next arrival
+                self.advance_to(min(self._ready(r) for r in self.queue))
             self.step()
             it += 1
 
     def latency_percentiles(self) -> Dict[str, float]:
-        """TTFT / end-to-end percentiles over completed requests (sim
-        time; arrival_time treated as submission into this engine)."""
-        if not self.completed:
-            return {}
-        ttft = np.array([r.first_token_time - r.arrival_time
-                         for r in self.completed if r.first_token_time >= 0])
-        e2e = np.array([r.finish_time - r.arrival_time
-                        for r in self.completed if r.finish_time >= 0])
-        out = {}
-        if len(ttft):
-            out["ttft_p50_s"] = round(float(np.quantile(ttft, 0.5)), 4)
-            out["ttft_p99_s"] = round(float(np.quantile(ttft, 0.99)), 4)
-        if len(e2e):
-            out["e2e_p99_s"] = round(float(np.quantile(e2e, 0.99)), 4)
-        return out
+        return latency_percentiles(self.completed)
+
+    @property
+    def occupancy(self) -> float:
+        """Mean fraction of the slot slab in use while the clock ran."""
+        denom = self.n_slots * self.meter.sim_time_s
+        return self.slot_seconds / denom if denom else 0.0
 
     def stats(self) -> Dict[str, float]:
         return dict(name=self.name, window=self.window,
@@ -173,4 +352,5 @@ class PoolEngine:
                     joules=round(self.meter.joules, 1),
                     tok_per_watt=round(self.meter.tok_per_watt, 3),
                     sim_time_s=round(self.meter.sim_time_s, 3),
+                    occupancy=round(self.occupancy, 3),
                     **self.latency_percentiles())

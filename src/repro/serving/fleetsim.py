@@ -1,0 +1,299 @@
+"""Fleet-scale serving simulator: the measured side of the paper's claims.
+
+The analytical layer (core.fleet / core.routing) *predicts* fleet tok/W from
+closed-form sizing; everything here *measures* it by actually running the
+fleet: N analytical-mode `PoolEngine`s per provisioned pool, fed Poisson
+arrivals drawn from the shared `core.workloads` traces through the same
+`ContextRouter` the token-level engine uses, with chunked-prefill
+interleave, FleetOpt overflow migration (preemption + re-prefill in the
+long pool), and per-iteration `EnergyMeter` charging.  The output is
+measured fleet tok/s, tok/W, TTFT/TPOT percentiles and per-pool occupancy
+that can be put head-to-head against the `core.fleet` prediction — the
+TokenPowerBench-style measurement cross-check of the 1/W law.
+
+Execution model (event-driven, per-engine timelines):
+
+  * Routing is context-length-based and time-independent, so every request
+    is routed up front; each engine then advances its own clock through its
+    private event sequence (idle-skip to next arrival, decode iterations of
+    tau(n, L), chunked prefill charges).  Engines never need a shared clock
+    — except for FleetOpt overflow migrations, which only flow short ->
+    long.  That dependency is a DAG, so pools run in topological order:
+    short pools drain first, their evicted requests are injected into the
+    long pools' (time-sorted) queues carrying their eviction timestamps,
+    then the long pools drain.
+  * Within a pool, requests are balanced over the N engine replicas by
+    least outstanding predicted work (prompt + predicted output tokens).
+
+Energy accounting note: the analytical Eq. 4 number charges decode power
+only; the simulator additionally meters prefill energy and idle power, so
+its all-in tok/W sits *below* the analytical prediction.  The report
+exposes both `tok_per_watt` (all-in) and `decode_tok_per_watt` (prefill
+and idle energy backed out) — the latter is the like-for-like comparison
+the integration test asserts against `core.fleet`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.fleet import FleetReport
+from repro.core.modelspec import ModelSpec
+from repro.core.profiles import BaseProfile
+from repro.core.routing import LONG_WINDOW, FleetOpt, Homogeneous, TwoPool
+from repro.core.workloads import Workload
+
+from .engine import PoolEngine
+from .request import (Request, latency_percentiles as _percentiles,
+                      sample_trace)
+from .router import ContextRouter, RouterPolicy
+
+
+def trace_requests(workload: Workload, n: int, *, seed: int = 0,
+                   max_total: int = LONG_WINDOW,
+                   arrival_rate: Optional[float] = None) -> List[Request]:
+    """n requests with (prompt, output) drawn from the workload trace and
+    Poisson arrivals.  Prompts are zero-copy broadcast views — analytical
+    engines only read the shape, so a 10k-request trace costs ~nothing."""
+    mean_out = int(round(workload.mean_output))
+    return [Request(
+        rid=i, prompt=np.broadcast_to(np.int64(0), (p,)),
+        max_new_tokens=o, arrival_time=t,
+        # honest routing: the router sees prompt + E[output], never the
+        # actual sampled output (core.routing.FleetOpt's assumption)
+        predicted_output=mean_out)
+        for i, (p, o, t) in enumerate(
+            sample_trace(workload, n, seed=seed, max_total=max_total,
+                         arrival_rate=arrival_rate))]
+
+
+def build_topology(kind: str, workload: Workload, profile: BaseProfile,
+                   model: ModelSpec, *, b_short: int, gamma: float = 2.0,
+                   long_window: int = LONG_WINDOW,
+                   ) -> Tuple[RouterPolicy, FleetReport]:
+    """(router policy, analytical sizing plan) for one §4 topology — the
+    same provisioning the simulator instantiates and the prediction it is
+    measured against."""
+    if kind == "homo":
+        rep = Homogeneous(window=long_window).provision(
+            workload, profile, model)
+        policy = RouterPolicy(kind="homo", b_short=b_short)
+    elif kind == "two_pool":
+        rep = TwoPool(b_short=b_short, long_window=long_window).provision(
+            workload, profile, model)
+        policy = RouterPolicy(kind="two_pool", b_short=b_short,
+                              p99_output=int(np.quantile(workload.outputs,
+                                                         0.99)))
+    elif kind == "fleetopt":
+        # The serving RouterPolicy admits short iff predicted total <=
+        # gamma * b_short and the short pool serves window gamma * b_short
+        # (router.py semantics).  The analytical twin with the identical
+        # traffic split and overflow boundary is FleetOpt(gamma*b_short,
+        # gamma=1): admission and window both at gamma*b_short, requests
+        # whose actual total overgrows it migrate.
+        rep = FleetOpt(b_short=int(gamma * b_short), gamma=1.0,
+                       long_window=long_window).provision(
+            workload, profile, model)
+        policy = RouterPolicy(kind="fleetopt", b_short=b_short, gamma=gamma)
+    else:
+        raise ValueError(kind)
+    return policy, rep
+
+
+class PoolGroup:
+    """N engine replicas serving one provisioned pool, balanced by least
+    outstanding predicted work.  Quacks like a PoolEngine for the router
+    (submit / stats)."""
+
+    def __init__(self, role: str, engines: List[PoolEngine]):
+        self.role = role
+        self.engines = engines
+        self._pending = np.zeros(len(engines), np.float64)
+
+    def submit(self, req: Request) -> None:
+        i = int(np.argmin(self._pending))
+        self._pending[i] += req.predicted_total
+        self.engines[i].submit(req)
+
+    @property
+    def completed(self) -> List[Request]:
+        return [r for e in self.engines for r in e.completed]
+
+    def stats(self) -> Dict[str, float]:
+        tok = sum(e.meter.tokens for e in self.engines)
+        joules = sum(e.meter.joules for e in self.engines)
+        times = [e.meter.sim_time_s for e in self.engines]
+        slot_s = sum(e.slot_seconds for e in self.engines)
+        avail = sum(e.n_slots * t for e, t in zip(self.engines, times))
+        return dict(role=self.role,
+                    window=self.engines[0].window,
+                    instances=len(self.engines),
+                    n_slots=self.engines[0].n_slots,
+                    completed=sum(len(e.completed) for e in self.engines),
+                    preempted=sum(e.preempted for e in self.engines),
+                    tokens=tok, joules=round(joules, 1),
+                    tok_per_watt=round(tok / joules, 3) if joules else 0.0,
+                    occupancy=round(slot_s / avail, 3) if avail else 0.0,
+                    sim_time_s=round(max(times), 3) if times else 0.0)
+
+
+class FleetSim:
+    """Instantiate an analytical sizing plan as a fleet of running engines."""
+
+    def __init__(self, policy: RouterPolicy, plan: FleetReport, *,
+                 model: ModelSpec, prefill_chunk: int = 512,
+                 rng_seed: int = 0):
+        self.policy = policy
+        self.plan = plan
+        pools = sorted(plan.pools, key=lambda p: p.window)
+        if policy.kind == "homo":
+            roles = [("homo", pools[0])]
+        else:
+            assert len(pools) == 2, [p.name for p in pools]
+            roles = [("short", pools[0]), ("long", pools[1])]
+        self.groups: Dict[str, PoolGroup] = {}
+        for role, p in roles:
+            # FleetOpt's overflow headroom ends at the gamma-window: a
+            # short-routed request that outgrows it migrates (preemption +
+            # re-prefill in the long pool).  Other pools truncate at their
+            # window, like the token-level engine.
+            evict = policy.kind == "fleetopt" and role == "short"
+            engines = [
+                PoolEngine(None, None, window=p.window, profile=p.profile,
+                           name=f"{p.name}#{j}",
+                           prefill_chunk=prefill_chunk,
+                           evict_on_overflow=evict, respect_arrival=True,
+                           streamed_params=model.streamed_params,
+                           rng_seed=rng_seed + 7919 * j)
+                for j in range(max(p.instances, 1))]
+            self.groups[role] = PoolGroup(role, engines)
+        self.router = ContextRouter(self.groups, policy)
+        self.migrations = 0
+        self._window: Tuple[float, float] = (0.0, float("inf"))
+
+    def run(self, requests: List[Request], *, warmup_frac: float = 0.35,
+            max_iters: int = 20_000_000) -> Dict[str, dict]:
+        reqs = sorted(requests, key=lambda r: r.arrival_time)
+        # steady-state measurement window: skip the fleet fill-up, stop at
+        # the last arrival (the drain tail is not steady state either)
+        t_last = reqs[-1].arrival_time if reqs else 0.0
+        self._window = (warmup_frac * t_last, t_last)
+        for grp in self.groups.values():
+            for e in grp.engines:
+                e.meter.measure_t0, e.meter.measure_t1 = self._window
+        for r in reqs:
+            self.router.route(r)
+        # topological order: overflow migrations only flow short -> long
+        order = [r for r in self.groups if r != "long"]
+        order += ["long"] if "long" in self.groups else []
+        migrated: List[Request] = []
+        for role in order:
+            grp = self.groups[role]
+            if role == "long" and migrated:
+                self.migrations = len(migrated)
+                for r in sorted(migrated, key=lambda r: r.ready_time):
+                    grp.submit(r)
+                for e in grp.engines:   # keep queues time-sorted for the
+                    e.queue = deque(    # head-gated admission
+                        sorted(e.queue, key=e._ready))
+                migrated = []
+            for e in grp.engines:
+                e.run_until_drained(max_iters=max_iters)
+                migrated.extend(e.overflowed)
+                e.overflowed = []
+        assert not (migrated and "long" in self.groups), \
+            "long pool may not overflow-evict"
+        return self.report()
+
+    def report(self) -> Dict[str, dict]:
+        out: Dict[str, dict] = {}
+        completed: List[Request] = []
+        tok = joules = prefill_j = idle_j = 0.0
+        for role, grp in self.groups.items():
+            out[role] = grp.stats()
+            completed += grp.completed
+            tok += sum(e.meter.m_tokens for e in grp.engines)
+            joules += sum(e.meter.m_joules for e in grp.engines)
+            prefill_j += sum(e.meter.m_prefill_joules for e in grp.engines)
+            idle_j += sum(e.meter.m_idle_joules for e in grp.engines)
+        # engines that sat idle past the window end never saw those idle
+        # watts: charge the gap so the fleet denominator is wall-clock honest
+        t0, t1 = self._window
+        for grp in self.groups.values():
+            for e in grp.engines:
+                gap = t1 - max(e.meter.sim_time_s, t0)
+                if gap > 0:
+                    extra = e.profile.power_model.p_idle_w * gap
+                    joules += extra
+                    idle_j += extra
+        span = max(t1 - t0, 1e-9)
+        decode_j = joules - prefill_j - idle_j
+        out["fleet"] = dict(
+            completed=len(completed),
+            migrations=self.migrations,
+            measure_window_s=(round(t0, 3), round(t1, 3)),
+            tokens=int(tok), joules=round(joules, 1),
+            tokens_per_s=round(tok / span, 1),
+            tok_per_watt=round(tok / joules, 3) if joules else 0.0,
+            decode_tok_per_watt=round(tok / decode_j, 3) if decode_j else 0.0,
+            prefill_energy_frac=round(prefill_j / joules, 3) if joules
+            else 0.0,
+            idle_energy_frac=round(idle_j / joules, 3) if joules else 0.0,
+            **_percentiles(completed))
+        return out
+
+
+@dataclasses.dataclass
+class SimVsAnalytical:
+    """One head-to-head cell: measured fleet vs closed-form sizing."""
+
+    workload: str
+    topology: str
+    analytical_tok_per_watt: float
+    sim_tok_per_watt: float          # all-in (prefill + idle metered)
+    sim_decode_tok_per_watt: float   # like-for-like with Eq. 4
+    report: Dict[str, dict]
+
+    @property
+    def delta_pct(self) -> float:
+        """Decode-only simulated vs analytical, in percent."""
+        return 100.0 * (self.sim_decode_tok_per_watt
+                        / self.analytical_tok_per_watt - 1.0)
+
+    def row(self) -> dict:
+        f = self.report["fleet"]
+        return dict(workload=self.workload, topology=self.topology,
+                    analytical=round(self.analytical_tok_per_watt, 2),
+                    simulated=round(self.sim_decode_tok_per_watt, 2),
+                    delta_pct=round(self.delta_pct, 1),
+                    all_in=round(self.sim_tok_per_watt, 2),
+                    ttft_p99_s=f.get("ttft_p99_s", 0.0),
+                    migrations=f["migrations"])
+
+
+def simulate_topology(kind: str, workload: Workload, profile: BaseProfile,
+                      model: ModelSpec, *, b_short: int, gamma: float = 2.0,
+                      n_requests: int = 4000, seed: int = 0,
+                      arrival_rate: Optional[float] = None,
+                      prefill_chunk: int = 512,
+                      long_window: int = LONG_WINDOW) -> SimVsAnalytical:
+    """Provision a topology analytically, then measure it end-to-end."""
+    if arrival_rate is not None and arrival_rate != workload.arrival_rate:
+        workload = dataclasses.replace(workload, arrival_rate=arrival_rate)
+    policy, plan = build_topology(kind, workload, profile, model,
+                                  b_short=b_short, gamma=gamma,
+                                  long_window=long_window)
+    sim = FleetSim(policy, plan, model=model, prefill_chunk=prefill_chunk,
+                   rng_seed=seed)
+    reqs = trace_requests(workload, n_requests, seed=seed,
+                          max_total=long_window)
+    report = sim.run(reqs)
+    return SimVsAnalytical(
+        workload=workload.name, topology=kind,
+        analytical_tok_per_watt=plan.tok_per_watt,
+        sim_tok_per_watt=report["fleet"]["tok_per_watt"],
+        sim_decode_tok_per_watt=report["fleet"]["decode_tok_per_watt"],
+        report=report)

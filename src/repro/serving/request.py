@@ -1,8 +1,11 @@
-"""Request/stream abstractions for the serving runtime."""
+"""Request/stream abstractions for the serving runtime + shared trace
+sampling and latency-percentile helpers (used by both the token-level
+engine and the fleet simulator, so the two layers can never diverge on
+clipping rules or metric definitions)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -19,6 +22,13 @@ class Request:
     finish_time: float = -1.0
     first_token_time: float = -1.0
     preemptions: int = 0
+    n_generated: int = 0
+    # admission gate after a FleetOpt overflow migration; latency metrics
+    # keep counting from the original arrival_time
+    ready_time: Optional[float] = None
+    # router-visible output-length prediction (e.g. E[output] from the
+    # workload trace).  None = oracle routing on the actual length.
+    predicted_output: Optional[int] = None
 
     @property
     def prompt_len(self) -> int:
@@ -26,27 +36,68 @@ class Request:
 
     @property
     def predicted_total(self) -> int:
-        return self.prompt_len + self.max_new_tokens
+        o = self.predicted_output if self.predicted_output is not None \
+            else self.max_new_tokens
+        return self.prompt_len + o
 
     @property
     def done(self) -> bool:
-        return (self.generated is not None
-                and len(self.generated) >= self.max_new_tokens)
+        """Finished generating: n_generated is authoritative (the engine
+        keeps in-flight counts in its slot arrays and flushes at finish;
+        analytical-mode requests never materialise `generated`)."""
+        n = max(self.n_generated, len(self.generated or ()))
+        return n >= self.max_new_tokens
+
+
+def sample_trace(workload, n: int, *, seed: int = 0, max_total: int = 4096,
+                 arrival_rate: Optional[float] = None,
+                 ) -> List[Tuple[int, int, float]]:
+    """(prompt_len, output_len, arrival_time) triples: workload lengths
+    clipped to max_total and Poisson arrivals.  The single source of the
+    clipping rule and the arrival process for every serving consumer."""
+    lens = workload.sample_requests(n, seed=seed)
+    rng = np.random.default_rng(seed + 7)
+    lam = arrival_rate if arrival_rate is not None else workload.arrival_rate
+    ts = np.cumsum(rng.exponential(1.0 / lam, size=n))
+    out = []
+    for i, (p, o) in enumerate(lens):
+        p = int(min(p, max_total - 1))
+        o = int(min(o, max_total - p))
+        out.append((max(p, 1), max(o, 1), float(ts[i])))
+    return out
 
 
 def synthetic_requests(workload, n: int, vocab: int, *, seed: int = 0,
                        max_total: int = 4096) -> List[Request]:
     """Draw (prompt_len, output_len) from a core.workloads trace and attach
     synthetic token ids (clipped so tiny CPU demos stay tractable)."""
-    lens = workload.sample_requests(n, seed=seed)
     rng = np.random.default_rng(seed + 7)
-    reqs = []
-    t = 0.0
-    for i, (p, o) in enumerate(lens):
-        p = int(min(p, max_total - 1))
-        o = int(min(o, max_total - p))
-        t += rng.exponential(1.0 / workload.arrival_rate)
-        reqs.append(Request(
-            rid=i, prompt=rng.integers(0, vocab, size=max(p, 1)),
-            max_new_tokens=max(o, 1), arrival_time=t))
-    return reqs
+    return [Request(rid=i, prompt=rng.integers(0, vocab, size=p),
+                    max_new_tokens=o, arrival_time=t)
+            for i, (p, o, t) in enumerate(
+                sample_trace(workload, n, seed=seed, max_total=max_total))]
+
+
+def latency_percentiles(reqs: Sequence[Request]) -> Dict[str, float]:
+    """TTFT / TPOT / end-to-end percentiles over completed requests (sim
+    time; arrival_time is submission into the fleet)."""
+    out: Dict[str, float] = {}
+    if not reqs:
+        return out
+    ttft = np.array([r.first_token_time - r.arrival_time for r in reqs
+                     if r.first_token_time >= 0])
+    e2e = np.array([r.finish_time - r.arrival_time for r in reqs
+                    if r.finish_time >= 0])
+    tpot = np.array([(r.finish_time - r.first_token_time)
+                     / (r.n_generated - 1) for r in reqs
+                     if r.finish_time >= 0 and r.first_token_time >= 0
+                     and r.n_generated > 1])
+    if len(ttft):
+        out["ttft_p50_s"] = round(float(np.quantile(ttft, 0.5)), 4)
+        out["ttft_p99_s"] = round(float(np.quantile(ttft, 0.99)), 4)
+    if len(e2e):
+        out["e2e_p99_s"] = round(float(np.quantile(e2e, 0.99)), 4)
+    if len(tpot):
+        out["tpot_p50_ms"] = round(float(np.quantile(tpot, 0.5)) * 1e3, 3)
+        out["tpot_p99_ms"] = round(float(np.quantile(tpot, 0.99)) * 1e3, 3)
+    return out

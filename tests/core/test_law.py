@@ -1,6 +1,7 @@
 """The 1/W law (paper Table 1, §3.1) — the core claim."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep; see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (B200_LLAMA70B, H100_LLAMA70B, context_sweep,

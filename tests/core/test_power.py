@@ -1,6 +1,7 @@
 """Eq. 1 logistic power model vs the paper's measured/stated values."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep; see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.core.power import (B200_POWER, GB200_POWER, H100_POWER, H200_POWER,

@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep; see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import flash_decode, mamba_scan, wkv6

@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep; see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.ref import mamba_scan_ref, wkv6_ref

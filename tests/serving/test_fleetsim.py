@@ -1,0 +1,161 @@
+"""Fleet simulator: analytical-mode engine semantics + the tentpole
+integration check — simulated FleetOpt >= 2x simulated Homo on Azure, and
+simulated tok/W within tolerance of the analytical core.fleet prediction.
+
+Everything is deterministic-seed; no jax touches the analytical engines.
+"""
+import numpy as np
+import pytest
+
+from repro.core.modelspec import LLAMA31_70B
+from repro.core.profiles import H100_LLAMA70B
+from repro.core.workloads import AGENT, AZURE
+from repro.serving import (FleetSim, PoolEngine, Request, build_topology,
+                           simulate_topology, trace_requests)
+
+STREAMED = LLAMA31_70B.streamed_params
+
+
+def _req(rid, plen, out, t=0.0):
+    return Request(rid=rid, prompt=np.zeros(plen, np.int64),
+                   max_new_tokens=out, arrival_time=t)
+
+
+# --- analytical-mode engine unit behaviour ------------------------------
+
+def test_analytical_engine_completes_and_meters():
+    eng = PoolEngine(None, None, window=64, profile=H100_LLAMA70B,
+                     n_slots=2, streamed_params=STREAMED)
+    for i in range(5):
+        eng.submit(_req(i, 8, 6))
+    eng.run_until_drained(max_iters=500)
+    assert len(eng.completed) == 5
+    assert all(r.n_generated == 6 for r in eng.completed)
+    # 5 requests x 5 metered decode tokens (the first token of each request
+    # comes out of prefill and is not a decode-iteration token)
+    assert eng.meter.tokens == 25
+    assert eng.meter.joules > 0
+    assert 0.0 < eng.occupancy <= 1.0
+
+
+def test_analytical_engine_is_deterministic():
+    def run():
+        eng = PoolEngine(None, None, window=64, profile=H100_LLAMA70B,
+                         n_slots=2, streamed_params=STREAMED, rng_seed=3)
+        for i in range(6):
+            eng.submit(_req(i, 7, 5))
+        eng.run_until_drained(max_iters=500)
+        return (eng.meter.joules, eng.meter.tokens,
+                [r.finish_time for r in eng.completed])
+
+    assert run() == run()
+
+
+def test_chunked_prefill_delays_first_token():
+    """With the chunked interleave a long prompt drains over several
+    iterations, so TTFT grows with prompt length."""
+    def ttft(plen):
+        eng = PoolEngine(None, None, window=4096, profile=H100_LLAMA70B,
+                         n_slots=1, streamed_params=STREAMED,
+                         prefill_chunk=128)
+        eng.submit(_req(0, plen, 3))
+        eng.run_until_drained(max_iters=200)
+        (r,) = eng.completed
+        return r.first_token_time - r.arrival_time
+
+    assert ttft(1024) > ttft(64) > 0
+
+
+def test_arrival_gating_charges_idle_power():
+    eng = PoolEngine(None, None, window=64, profile=H100_LLAMA70B,
+                     n_slots=2, streamed_params=STREAMED,
+                     respect_arrival=True)
+    eng.submit(_req(0, 8, 4, t=1.0))      # arrives after 1s of idleness
+    eng.run_until_drained(max_iters=100)
+    assert len(eng.completed) == 1
+    assert eng.meter.idle_joules == pytest.approx(
+        H100_LLAMA70B.power_model.p_idle_w * 1.0, rel=1e-6)
+    assert eng.completed[0].first_token_time >= 1.0
+
+
+def test_overflow_eviction_backs_out_wasted_tokens():
+    eng = PoolEngine(None, None, window=16, profile=H100_LLAMA70B,
+                     n_slots=1, streamed_params=STREAMED,
+                     evict_on_overflow=True)
+    eng.submit(_req(0, 8, 500))           # can never fit window 16
+    eng.run_until_drained(max_iters=100)
+    assert len(eng.completed) == 0
+    assert len(eng.overflowed) == 1
+    (r,) = eng.overflowed
+    assert r.preemptions == 1 and r.ready_time is not None
+    # wasted decode work produces no counted output tokens (energy stays)
+    assert eng.meter.tokens == 0
+    assert eng.meter.joules > 0
+
+
+# --- fleet-level integration (the tentpole acceptance) ------------------
+
+@pytest.fixture(scope="module")
+def azure_cells():
+    return {kind: simulate_topology(
+        kind, AZURE, H100_LLAMA70B, LLAMA31_70B,
+        b_short=4096, n_requests=8000, seed=0)
+        for kind in ("homo", "fleetopt")}
+
+
+def test_simulated_fleetopt_at_least_2x_homo_on_azure(azure_cells):
+    homo = azure_cells["homo"].sim_decode_tok_per_watt
+    fo = azure_cells["fleetopt"].sim_decode_tok_per_watt
+    assert fo >= 2.0 * homo, (fo, homo)
+
+
+def test_simulated_within_tolerance_of_analytical(azure_cells):
+    """Stated tolerance: measured steady-state decode tok/W within 25% of
+    the closed-form core.fleet sizing it was provisioned from (observed
+    at seed 0 / 8k requests: homo -15%, fleetopt -2%)."""
+    for kind, cell in azure_cells.items():
+        assert abs(cell.delta_pct) < 25.0, (kind, cell.delta_pct)
+
+
+def test_fleet_conservation_and_report_shape(azure_cells):
+    for cell in azure_cells.values():
+        f = cell.report["fleet"]
+        assert f["completed"] == 8000
+        assert f["tok_per_watt"] <= f["decode_tok_per_watt"]
+        assert 0.0 <= f["prefill_energy_frac"] < 1.0
+        assert f["ttft_p99_s"] >= f["ttft_p50_s"] > 0
+        for role, s in cell.report.items():
+            if role == "fleet":
+                continue
+            assert 0.0 <= s["occupancy"] <= 1.0
+
+
+def test_overflow_migration_end_to_end():
+    """A tight gamma forces short-pool overflows; migrated requests must
+    re-prefill in the long pool and every request still completes."""
+    cell = simulate_topology("fleetopt", AGENT, H100_LLAMA70B, LLAMA31_70B,
+                             b_short=8192, gamma=1.1, n_requests=1500,
+                             seed=1)
+    f = cell.report["fleet"]
+    assert f["migrations"] > 0
+    assert f["completed"] == 1500
+    # every migration is a short-pool preemption, finished in the long pool
+    assert cell.report["short"]["preempted"] == f["migrations"]
+    assert cell.report["long"]["completed"] >= f["migrations"]
+
+
+def test_build_topology_rejects_unknown_kind():
+    with pytest.raises(ValueError):
+        build_topology("nope", AZURE, H100_LLAMA70B, LLAMA31_70B,
+                       b_short=4096)
+
+
+def test_trace_requests_clips_and_predicts():
+    reqs = trace_requests(AZURE, 200, seed=0, max_total=4096)
+    assert len(reqs) == 200
+    assert all(r.prompt_len + r.max_new_tokens <= 4096 for r in reqs)
+    assert all(r.predicted_output == int(round(AZURE.mean_output))
+               for r in reqs)
+    # Poisson arrivals are strictly increasing
+    ts = [r.arrival_time for r in reqs]
+    assert all(b > a for a, b in zip(ts, ts[1:]))

@@ -1,0 +1,76 @@
+"""RouterPolicy admission boundaries — exact edges for all three §4
+topologies, against analytical-mode engines (no model, no jax on the hot
+path)."""
+import numpy as np
+import pytest
+
+from repro.core.profiles import H100_LLAMA70B
+from repro.serving import ContextRouter, PoolEngine, Request, RouterPolicy
+
+STREAMED = 70e9
+
+
+def _pool(name, window):
+    return PoolEngine(None, None, window=window, profile=H100_LLAMA70B,
+                      n_slots=4, name=name, streamed_params=STREAMED)
+
+
+def _req(rid, plen, out, predicted=None):
+    return Request(rid=rid, prompt=np.zeros(plen, np.int64),
+                   max_new_tokens=out, predicted_output=predicted)
+
+
+def _router(kind, **kw):
+    pools = {"short": _pool("short", 64), "long": _pool("long", 256)} \
+        if kind != "homo" else {"only": _pool("only", 256)}
+    return ContextRouter(pools, RouterPolicy(kind=kind, **kw))
+
+
+def test_homo_routes_everything_to_the_single_pool():
+    r = _router("homo", b_short=32)
+    assert r.route(_req(0, 1, 1)) == "only"
+    assert r.route(_req(1, 1000, 1000)) == "only"
+
+
+def test_two_pool_admission_boundary_is_exact():
+    # short iff prompt + p99_output <= b_short (conservative, no overflow)
+    r = _router("two_pool", b_short=32, p99_output=10)
+    assert r.route(_req(0, 22, 1)) == "short"      # 22 + 10 == 32, inclusive
+    assert r.route(_req(1, 23, 1)) == "long"       # 23 + 10 == 33 > 32
+    # actual output length is irrelevant: only the p99 margin counts
+    assert r.route(_req(2, 22, 500)) == "short"
+
+
+def test_two_pool_p99_margin_edge():
+    # margin 0: boundary collapses to prompt_len <= b_short
+    r = _router("two_pool", b_short=32, p99_output=0)
+    assert r.route(_req(0, 32, 1)) == "short"
+    assert r.route(_req(1, 33, 1)) == "long"
+
+
+def test_fleetopt_admission_boundary_is_gamma_b_short():
+    # short iff predicted_total <= gamma * b_short (overflow headroom)
+    r = _router("fleetopt", b_short=32, gamma=2.0)
+    assert r.route(_req(0, 54, 10)) == "short"     # 64 == 2 * 32, inclusive
+    assert r.route(_req(1, 55, 10)) == "long"      # 65 > 64
+    # gamma = 1: no headroom, boundary is b_short itself
+    r1 = _router("fleetopt", b_short=32, gamma=1.0)
+    assert r1.route(_req(2, 22, 10)) == "short"
+    assert r1.route(_req(3, 23, 10)) == "long"
+
+
+def test_fleetopt_routes_on_prediction_not_actual_length():
+    """Honest routing: predicted_output (E[output]) drives the decision,
+    not the sampled output length — the source of overflow migrations."""
+    r = _router("fleetopt", b_short=32, gamma=2.0)
+    # predicted 30 + 30 = 60 <= 64 -> short, though actual total is 530
+    assert r.route(_req(0, 30, 500, predicted=30)) == "short"
+    # predicted 30 + 40 = 70 > 64 -> long, though actual total is only 35
+    assert r.route(_req(1, 30, 5, predicted=40)) == "long"
+
+
+def test_unknown_policy_kind_raises():
+    r = _router("homo")
+    r.policy = RouterPolicy(kind="nope")
+    with pytest.raises(ValueError):
+        r.route(_req(0, 1, 1))
