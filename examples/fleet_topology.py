@@ -2,16 +2,19 @@
 
 Evaluates Homo / Pool / FleetOpt on H100 & B200 over all three workload
 archetypes, decomposes topology x generation gains (§4.2), compares
-semantic vs context routing (§5.1), and closes with the event-driven
+semantic vs context routing (§5.1), closes the loop with the event-driven
 fleet simulator measuring the Azure topologies end-to-end (serving
-.fleetsim) against the closed-form sizing that provisioned them.
+.fleetsim) against the closed-form sizing that provisioned them, and ends
+with the SLO-constrained sizing loop (core.slo): the fleets re-provisioned
+until their *measured* TTFT p99 actually meets the paper's 500 ms target,
+including a K = 3 multipool ladder (§10.3).
 
   PYTHONPATH=src python examples/fleet_topology.py [--sim-requests N]
 """
 from repro.core import (AGENT, AZURE, LMSYS, B200_LLAMA70B_FLEET,
                         H100_LLAMA70B, FleetOpt, Homogeneous, Semantic,
                         TwoPool, computed_profile, gain_decomposition,
-                        optimize_gamma)
+                        ladder_windows, optimize_gamma, size_to_slo)
 from repro.core.hardware import H100
 from repro.core.modelspec import LLAMA31_8B, LLAMA31_70B
 from repro.core.power import H100_POWER
@@ -36,6 +39,31 @@ def simulated_crosscheck(n_requests: int = 4000) -> None:
               f" | {f['migrations']} migrations")
     print(f"  measured fleetopt/homo gain: "
           f"{sim_tpw['fleetopt'] / sim_tpw['homo']:.2f}x")
+
+
+def slo_constrained_sizing(n_requests: int = 2000) -> None:
+    """Fix the TTFT-SLO violation: re-provision until the measured p99
+    complies, and report the tok/W price of compliance."""
+    print(f"\n=== SLO-constrained sizing (P99 TTFT <= 500 ms, "
+          f"{n_requests} requests) ===")
+    cells = (("H100", H100_LLAMA70B, "fleetopt",
+              dict(b_short=4096)),
+             ("H100", H100_LLAMA70B, "multipool",
+              dict(windows=ladder_windows(3))),
+             ("B200", B200_LLAMA70B_FLEET, "fleetopt",
+              dict(b_short=4096)))
+    for gen, prof, kind, kw in cells:
+        res = size_to_slo(kind, AZURE, prof, LLAMA31_70B,
+                          n_requests=n_requests, **kw)
+        cal = ", ".join(f"{r}={v:.2f}"
+                        for r, v in res.calibrated_prefill_mfu.items())
+        print(f"  {gen} {kind:9s} Eq.4 {res.unconstrained.tok_per_watt:5.2f}"
+              f" -> SLO-feasible {res.slo_tok_per_watt:5.2f} tok/W"
+              f" (cost {res.compliance_cost_pct:+.1f}%,"
+              f" +{res.instances_added} inst,"
+              f" {len(res.rounds)} rounds)"
+              f" | measured TTFT p99 {res.ttft_p99_s:.3f}s"
+              + (f" | calibrated prefill MFU: {cal}" if cal else ""))
 
 
 def main(sim_requests: int = 4000):
@@ -79,6 +107,7 @@ def main(sim_requests: int = 4000):
           f"({sem.instances} instances; quality question, not tok/W — §5.1)")
 
     simulated_crosscheck(n_requests=sim_requests)
+    slo_constrained_sizing(n_requests=max(sim_requests // 2, 1000))
 
 
 if __name__ == "__main__":

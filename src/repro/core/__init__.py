@@ -9,19 +9,23 @@ Public API surface (see DESIGN.md §2):
   profiles   — GpuProfile protocol, ManualProfile, computed_profile
   tokenomics — Eq. 2 / Eq. 4 + Table-1 context sweep
   workloads  — Azure / LMSYS / agent trace reconstructions
-  fleet      — Little's-law fleet sizing
+  fleet      — Little's-law fleet sizing (+ PoolOverride recalibration)
   routing    — Homo / TwoPool / FleetOpt / Semantic topologies
+  multipool  — K >= 3 geometric window ladders (§10.3)
+  slo        — SLO-constrained sizing loop (measured TTFT p99 authority)
   law        — 1/W-law fits + gain decomposition
   moe        — active-parameter streaming + dispatch sensitivity
   analyzer   — fleet_tpw_analysis (Appendix B API)
 """
 from . import (adaptive, analyzer, carbon, disagg, fleet, hardware, kvcache,
                law, modelspec, moe, multipool, power, profiles, roofline,
-               routing, speculative, tokenomics, workloads)
+               routing, slo, speculative, tokenomics, workloads)
 from .adaptive import AdaptiveController
 from .carbon import GRIDS, EnergyBill, GridProfile, bill
 from .disagg import Disaggregated
-from .multipool import MultiPool, sweep_pool_counts
+from .fleet import PoolOverride
+from .multipool import MultiPool, ladder_windows, sweep_pool_counts
+from .slo import SLOSizingResult, SLOSpec, size_to_slo
 from .speculative import speculative_tok_per_watt
 from .analyzer import FleetAnalysis, fleet_tpw_analysis
 from .hardware import B200, GB200, H100, H200, TPU_V5E, ChipSpec

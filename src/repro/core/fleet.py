@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 from .profiles import BaseProfile
 
@@ -33,6 +33,10 @@ RHO_OP = 0.85           # operating utilization for the power term
 # Effective prefill MFU (chunked prefill piggybacks on memory-bound decode
 # iterations, so the achievable fraction of peak is high).  Calibrated
 # jointly with HOL_INFLATION against Table 3 (see EXPERIMENTS.md §Claims).
+# NOTE: this closed-form value is optimistic about queueing — fleets sized
+# with it can violate the P99 TTFT SLO when actually run.  core.slo closes
+# the loop by recalibrating an *effective* per-pool prefill MFU against the
+# measured FleetSim TTFT (see DESIGN.md §5).
 PREFILL_MFU = 0.8
 
 
@@ -55,30 +59,75 @@ class PoolSizing:
     tokens_per_s: float = 0.0
     decode_bound: int = 0
     prefill_bound: int = 0
+    n_inflight: float = 0.0      # Little's-law decode population (size())
+    sized_prefill_mfu: float = PREFILL_MFU   # MFU the bounds were sized at
 
     def size(self, *, streamed_params: float,
              prefill_mfu: Optional[float] = None) -> "PoolSizing":
         if prefill_mfu is None:
             prefill_mfu = PREFILL_MFU  # read at call time (calibratable)
+        self.sized_prefill_mfu = prefill_mfu
         prof = self.profile
         nmax = prof.n_max(self.window)
         tau_s = prof.roofline.tau_ms(nmax, self.mean_context) * 1e-3
         n_inflight = self.arrival_rate * self.mean_output * tau_s \
             * self.hol_inflation
+        self.n_inflight = n_inflight
         self.decode_bound = math.ceil(n_inflight / nmax) if n_inflight else 0
-        # prefill capacity per instance (tokens/s)
-        prefill_tput = (prof.tp * prof.chip.peak_bf16_flops * prefill_mfu
-                        / (2.0 * streamed_params))
-        prefill_load = self.arrival_rate * self.mean_prompt * self.hol_inflation
-        self.prefill_bound = math.ceil(prefill_load / prefill_tput) \
-            if prefill_load else 0
+        self.prefill_bound = self._prefill_bound(streamed_params, prefill_mfu)
         self.instances = max(self.decode_bound, self.prefill_bound, 0)
         if self.arrival_rate > 0:
             self.instances = max(self.instances, 1)
         if self.instances:
-            self.n_active = min(n_inflight / self.instances, RHO_OP * nmax)
-            self.power_w_per_instance = prof.power_w(self.n_active)
+            self._operating_point()
             self.tokens_per_s = self.arrival_rate * self.mean_output
+        return self
+
+    def _prefill_bound(self, streamed_params: float,
+                       prefill_mfu: float) -> int:
+        """Instances forced by aggregate prefill throughput (tokens/s)."""
+        prof = self.profile
+        prefill_tput = (prof.tp * prof.chip.peak_bf16_flops * prefill_mfu
+                        / (2.0 * streamed_params))
+        prefill_load = self.arrival_rate * self.mean_prompt * self.hol_inflation
+        return math.ceil(prefill_load / prefill_tput) if prefill_load else 0
+
+    def _operating_point(self) -> None:
+        nmax = self.profile.n_max(self.window)
+        self.n_active = min(self.n_inflight / self.instances, RHO_OP * nmax)
+        self.power_w_per_instance = self.profile.power_w(self.n_active)
+
+    def recalibrate(self, *, streamed_params: float,
+                    prefill_mfu: Optional[float] = None,
+                    hol_inflation: Optional[float] = None,
+                    min_instances: int = 0,
+                    extra_instances: int = 0) -> "PoolSizing":
+        """SLO-loop re-provisioning knob (core.slo / DESIGN.md §5): re-derive
+        the instance count under a recalibrated effective prefill MFU,
+        head-of-line inflation factor and/or an instance-count floor,
+        preserving every provision-time adjustment (e.g. FleetOpt's
+        migrated-token backout of `tokens_per_s`) and never *shrinking* a
+        pool — SLO compliance only adds capacity."""
+        if self.arrival_rate <= 0:
+            return self
+        if hol_inflation is not None:
+            self.hol_inflation = max(hol_inflation, self.hol_inflation)
+            prof = self.profile
+            nmax = prof.n_max(self.window)
+            tau_s = prof.roofline.tau_ms(nmax, self.mean_context) * 1e-3
+            self.n_inflight = self.arrival_rate * self.mean_output * tau_s \
+                * self.hol_inflation
+            self.decode_bound = math.ceil(self.n_inflight / nmax) \
+                if self.n_inflight else 0
+        if prefill_mfu is not None:
+            self.sized_prefill_mfu = prefill_mfu
+        if prefill_mfu is not None or hol_inflation is not None:
+            self.prefill_bound = self._prefill_bound(
+                streamed_params, self.sized_prefill_mfu)
+        self.instances = max(self.instances, self.decode_bound,
+                             self.prefill_bound, int(min_instances), 1)
+        self.instances += max(int(extra_instances), 0)
+        self._operating_point()
         return self
 
 
@@ -124,3 +173,40 @@ def size_fleet(pools: List[PoolSizing], *, streamed_params: float,
         p.size(streamed_params=streamed_params, prefill_mfu=prefill_mfu)
     return FleetReport(pools=[p for p in pools if p.arrival_rate > 0],
                        label=label)
+
+
+@dataclasses.dataclass
+class PoolOverride:
+    """Per-pool sizing recalibration layered on a provisioned FleetReport.
+
+    The SLO loop (core.slo) accumulates one of these per router role across
+    rounds: `prefill_mfu` lowers the effective prefill MFU (raising the
+    prefill instance bound), `hol_inflation` raises the head-of-line
+    occupancy factor (raising both bounds), `min_instances` ratchets the
+    pool to at least that capacity (levers take a max, they never
+    compound), and `extra_instances` forces additional capacity beyond
+    every bound.  Applied via `apply_overrides`.
+    """
+
+    prefill_mfu: Optional[float] = None
+    hol_inflation: Optional[float] = None
+    min_instances: int = 0
+    extra_instances: int = 0
+
+
+def apply_overrides(report: FleetReport,
+                    overrides: Dict[str, PoolOverride], *,
+                    roles: List[str], streamed_params: float) -> FleetReport:
+    """Recalibrate `report`'s pools (ascending-window order, one role name
+    per pool) in place with the given per-role overrides."""
+    pools = sorted(report.pools, key=lambda p: p.window)
+    assert len(roles) == len(pools), (roles, [p.name for p in pools])
+    for role, pool in zip(roles, pools):
+        o = overrides.get(role)
+        if o is not None:
+            pool.recalibrate(streamed_params=streamed_params,
+                             prefill_mfu=o.prefill_mfu,
+                             hol_inflation=o.hol_inflation,
+                             min_instances=o.min_instances,
+                             extra_instances=o.extra_instances)
+    return report

@@ -31,20 +31,30 @@ class MultiPool:
 
     def provision(self, workload: Workload, profile: BaseProfile,
                   model: ModelSpec) -> FleetReport:
+        ws = [int(w) for w in self.windows]
+        if not ws or any(a >= b for a, b in zip(ws, ws[1:])):
+            raise ValueError(
+                f"MultiPool windows must be strictly ascending, got {ws}")
+        if self.gamma < 1.0:
+            raise ValueError(f"gamma must be >= 1, got {self.gamma}")
+        names = [f"pool-{w // 1024}K" for w in ws]
+        if len(set(names)) != len(names):
+            raise ValueError(f"windows {ws} collide at 1K naming"
+                             f" granularity: {names}")
         p, o = workload.prompts, workload.outputs
         lam = workload.arrival_rate
         predicted = p + workload.mean_output
         pools: List[PoolSizing] = []
         assigned = np.zeros(p.shape, bool)
-        for i, w in enumerate(self.windows):
-            boundary = w / self.gamma if i < len(self.windows) - 1 else w
+        for i, w in enumerate(ws):
+            boundary = w / self.gamma if i < len(ws) - 1 else w
             mask = ~assigned & (predicted <= boundary)
-            if i == len(self.windows) - 1:   # largest pool takes the rest
+            if i == len(ws) - 1:             # largest pool takes the rest
                 mask = ~assigned
             assigned |= mask
             s = _subset_stats(p, o, mask)
             pools.append(PoolSizing(
-                name=f"pool-{w // 1024}K", window=int(w), profile=profile,
+                name=names[i], window=int(w), profile=profile,
                 arrival_rate=lam * s["frac"],
                 mean_output=s["mean_output"],
                 mean_context=s["mean_context"],
@@ -53,15 +63,30 @@ class MultiPool:
                           label=f"MultiPool{list(self.windows)}")
 
 
+def ladder_windows(k: int, *, max_window: int = 65536,
+                   min_window: int = 2048) -> List[int]:
+    """Geometric window ladder ending at max_window.  The min_window clamp
+    can collapse the bottom rungs into duplicates (e.g. two 2K pools at
+    k >= 4 under a 64K ceiling) — those are deduped, so the effective pool
+    count may be smaller than `k`."""
+    windows = [max(max_window // (4 ** (k - 1 - i)), min_window)
+               for i in range(k)]
+    return sorted(dict.fromkeys(windows))
+
+
 def sweep_pool_counts(workload: Workload, profile: BaseProfile,
                       model: ModelSpec, *, max_window: int = 65536,
                       ) -> List[Tuple[int, float]]:
-    """Fleet tok/W vs number of pools (geometric window ladder)."""
+    """Fleet tok/W vs *effective* number of pools (deduped geometric window
+    ladder).  Requested k whose clamped ladder collapses onto an already
+    reported pool count are skipped — no dead duplicate-window pools."""
     out = []
+    seen = set()
     for k in (1, 2, 3, 4, 5):
-        # geometric ladder ending at max_window
-        windows = [max_window // (4 ** (k - 1 - i)) for i in range(k)]
-        windows = [max(w, 2048) for w in windows]
+        windows = ladder_windows(k, max_window=max_window)
+        if len(windows) in seen:
+            continue
+        seen.add(len(windows))
         rep = MultiPool(windows=windows).provision(workload, profile, model)
-        out.append((k, rep.tok_per_watt))
+        out.append((len(windows), rep.tok_per_watt))
     return out

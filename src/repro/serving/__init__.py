@@ -1,11 +1,11 @@
 from .energy import EnergyMeter
 from .engine import PoolEngine
 from .fleetsim import (FleetSim, PoolGroup, SimVsAnalytical, build_topology,
-                       simulate_topology, trace_requests)
+                       simulate_topology, topology_roles, trace_requests)
 from .request import Request, synthetic_requests
 from .router import ContextRouter, RouterPolicy
 
 __all__ = ["EnergyMeter", "PoolEngine", "Request", "synthetic_requests",
            "ContextRouter", "RouterPolicy", "FleetSim", "PoolGroup",
            "SimVsAnalytical", "build_topology", "simulate_topology",
-           "trace_requests"]
+           "topology_roles", "trace_requests"]

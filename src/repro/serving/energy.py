@@ -10,11 +10,13 @@ between the executable system and the paper's closed-form law.
 Steady-state measurement window: a fleet simulation starts from an empty
 fleet and drains at the end, but the analytical Eq. 4 number describes
 steady state.  Setting `measure_t0`/`measure_t1` makes the meter
-additionally accumulate every charge whose interval midpoint falls inside
-the window into the `m_*` counters, so ramp-in and drain-out transients
-can be excluded from the measured tok/W (the totals are always kept too).
-With the window left at its (0, inf) default the `m_*` counters simply
-mirror the totals.
+additionally accumulate in-window charges into the `m_*` counters, so
+ramp-in and drain-out transients can be excluded from the measured tok/W
+(the totals are always kept too).  Decode charges are ms-scale and
+midpoint-tested; idle and prefill charges can straddle the boundary (idle
+skips span seconds, prefill chunks hide behind decode overlap) and are
+pro-rated by exact interval overlap.  With the window left at its (0, inf)
+default the `m_*` counters simply mirror the totals.
 """
 from __future__ import annotations
 
@@ -65,18 +67,31 @@ class EnergyMeter:
     def charge_prefill(self, n_tokens: int, *, mfu: float = 0.8,
                        streamed_params: float = 1e9,
                        overlap_s: float = 0.0) -> float:
-        """Charge prefill compute.  Energy is always work-proportional;
-        `overlap_s` is decode-iteration time the chunk hides behind
-        (chunked prefill piggybacks compute-bound prompt processing on the
-        memory-bound decode pass), so only the excess advances the clock."""
+        """Charge prefill compute.  Energy is always work-proportional and
+        drawn at the compute-bound operating point — the logistic's
+        saturated draw P_nom (Eq. 1 as b -> inf), not the b = 1 decode
+        point: prompt processing saturates the FLOP units.  `overlap_s` is
+        decode-iteration time the chunk hides behind (chunked prefill
+        piggybacks on the memory-bound decode pass), so only the excess
+        advances the clock.  The work therefore spans
+        [sim_time - hidden, sim_time + dt]; in-window attribution pro-rates
+        the energy by overlap with the measurement window exactly like
+        `charge_idle` — midpoint-testing dt would see a zero-length
+        interval whenever the chunk fully piggybacks (dt = 0) and
+        misattribute boundary-straddling chunks wholesale."""
         flops = 2.0 * streamed_params * n_tokens
         t = flops / (self.profile.tp * self.profile.chip.peak_bf16_flops
                      * mfu)
-        e = self.profile.power_w(1) * t
-        dt = max(t - overlap_s, 0.0)
-        if self._in_window(dt):
-            self.m_joules += e
-            self.m_prefill_joules += e
+        e = self.profile.power_model.p_nom_w * t
+        hidden = min(overlap_s, t)
+        dt = t - hidden
+        start, end = self.sim_time_s - hidden, self.sim_time_s + dt
+        overlap = max(0.0, min(self.measure_t1, end)
+                      - max(self.measure_t0, start))
+        if overlap > 0 and t > 0:
+            e_in = e * min(overlap / t, 1.0)
+            self.m_joules += e_in
+            self.m_prefill_joules += e_in
         self.joules += e
         self.prefill_joules += e
         self.prefill_tokens += n_tokens

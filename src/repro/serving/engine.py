@@ -337,6 +337,11 @@ class PoolEngine:
     def latency_percentiles(self) -> Dict[str, float]:
         return latency_percentiles(self.completed)
 
+    def measured_totals(self) -> Dict[str, float]:
+        """Unrounded steady-state-windowed (tokens, joules) — the fleet
+        roll-up sums these so report paths agree exactly."""
+        return dict(tokens=self.meter.m_tokens, joules=self.meter.m_joules)
+
     @property
     def occupancy(self) -> float:
         """Mean fraction of the slot slab in use while the clock ran."""
@@ -350,6 +355,10 @@ class PoolEngine:
                     preempted=self.preempted,
                     tokens=self.meter.tokens,
                     joules=round(self.meter.joules, 1),
+                    # steady-state-windowed counters (mirror the totals when
+                    # the meter window is left at its (0, inf) default)
+                    m_tokens=self.meter.m_tokens,
+                    m_joules=round(self.meter.m_joules, 1),
                     tok_per_watt=round(self.meter.tok_per_watt, 3),
                     sim_time_s=round(self.meter.sim_time_s, 3),
                     occupancy=round(self.occupancy, 3),

@@ -17,13 +17,19 @@ Execution model (event-driven, per-engine timelines):
     is routed up front; each engine then advances its own clock through its
     private event sequence (idle-skip to next arrival, decode iterations of
     tau(n, L), chunked prefill charges).  Engines never need a shared clock
-    — except for FleetOpt overflow migrations, which only flow short ->
-    long.  That dependency is a DAG, so pools run in topological order:
-    short pools drain first, their evicted requests are injected into the
-    long pools' (time-sorted) queues carrying their eviction timestamps,
-    then the long pools drain.
+    — except for overflow migrations, which only flow toward larger
+    windows (pool i -> pool i+1 in the admission ladder; FleetOpt's
+    short -> long is the K = 2 case).  That dependency is a DAG, so pools
+    run in ascending-window topological order: each pool drains, its
+    evicted requests are injected into the next pool's (time-sorted) queue
+    carrying their eviction timestamps, then the next pool drains.  A
+    K-pool request can migrate several hops (short -> mid -> long);
+    `migrations` counts hops, not unique requests.
   * Within a pool, requests are balanced over the N engine replicas by
-    least outstanding predicted work (prompt + predicted output tokens).
+    least *total assigned* predicted work (prompt + predicted output
+    tokens).  All routing happens before any engine runs, so "outstanding"
+    work cannot decay between assignments — cumulative assigned work is
+    the correct (and intended) balancing key.
 
 Energy accounting note: the analytical Eq. 4 number charges decode power
 only; the simulator additionally meters prefill energy and idle power, so
@@ -35,13 +41,15 @@ the integration test asserts against `core.fleet`.
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import deque
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.fleet import FleetReport
+from repro.core.fleet import FleetReport, PoolOverride, apply_overrides
 from repro.core.modelspec import ModelSpec
+from repro.core.multipool import MultiPool
 from repro.core.profiles import BaseProfile
 from repro.core.routing import LONG_WINDOW, FleetOpt, Homogeneous, TwoPool
 from repro.core.workloads import Workload
@@ -70,13 +78,30 @@ def trace_requests(workload: Workload, n: int, *, seed: int = 0,
                          arrival_rate=arrival_rate))]
 
 
+def topology_roles(kind: str, plan: FleetReport) -> List[str]:
+    """Router role name per plan pool, ascending-window order."""
+    pools = sorted(plan.pools, key=lambda p: p.window)
+    if kind == "homo":
+        return ["homo"]
+    if kind in ("two_pool", "fleetopt"):
+        assert len(pools) == 2, [p.name for p in pools]
+        return ["short", "long"]
+    if kind == "multipool":
+        return [p.name for p in pools]
+    raise ValueError(kind)
+
+
 def build_topology(kind: str, workload: Workload, profile: BaseProfile,
-                   model: ModelSpec, *, b_short: int, gamma: float = 2.0,
-                   long_window: int = LONG_WINDOW,
+                   model: ModelSpec, *, b_short: int = 4096,
+                   gamma: float = 2.0, long_window: int = LONG_WINDOW,
+                   windows: Optional[Sequence[int]] = None,
+                   pool_overrides: Optional[Dict[str, PoolOverride]] = None,
                    ) -> Tuple[RouterPolicy, FleetReport]:
-    """(router policy, analytical sizing plan) for one §4 topology — the
-    same provisioning the simulator instantiates and the prediction it is
-    measured against."""
+    """(router policy, analytical sizing plan) for one §4 topology or a
+    K >= 3 `core.multipool` ladder (`kind="multipool"`, pass `windows`) —
+    the same provisioning the simulator instantiates and the prediction it
+    is measured against.  `pool_overrides` layers per-role SLO
+    recalibrations (core.slo) on the closed-form plan."""
     if kind == "homo":
         rep = Homogeneous(window=long_window).provision(
             workload, profile, model)
@@ -98,15 +123,37 @@ def build_topology(kind: str, workload: Workload, profile: BaseProfile,
                        long_window=long_window).provision(
             workload, profile, model)
         policy = RouterPolicy(kind="fleetopt", b_short=b_short, gamma=gamma)
+    elif kind == "multipool":
+        if not windows:
+            raise ValueError("kind='multipool' needs an ascending `windows`"
+                             " ladder (e.g. core.multipool.ladder_windows)")
+        rep = MultiPool(windows=list(windows), gamma=gamma).provision(
+            workload, profile, model)
+        pools = sorted(rep.pools, key=lambda p: p.window)
+        if not pools:
+            raise ValueError("multipool plan provisioned no pools")
+        # admission at window/gamma (route-at-w/gamma, serve-at-w overflow
+        # headroom); the largest surviving pool takes everything else
+        ladder = [(p.name, p.window / gamma) for p in pools[:-1]]
+        ladder.append((pools[-1].name, math.inf))
+        policy = RouterPolicy(kind="multipool", gamma=gamma, ladder=ladder)
     else:
         raise ValueError(kind)
+    if pool_overrides:
+        apply_overrides(rep, pool_overrides,
+                        roles=topology_roles(kind, rep),
+                        streamed_params=model.streamed_params)
     return policy, rep
 
 
 class PoolGroup:
     """N engine replicas serving one provisioned pool, balanced by least
-    outstanding predicted work.  Quacks like a PoolEngine for the router
-    (submit / stats)."""
+    *total assigned* predicted work (prompt + predicted output).  Every
+    request is routed before any engine runs (see the execution model
+    above), so there is no notion of work "draining" between assignments —
+    `_pending` is deliberately a monotone cumulative-assignment counter,
+    which load-balances the whole trace across replicas.  Quacks like a
+    PoolEngine for the router (submit / stats)."""
 
     def __init__(self, role: str, engines: List[PoolEngine]):
         self.role = role
@@ -122,6 +169,16 @@ class PoolGroup:
     def completed(self) -> List[Request]:
         return [r for e in self.engines for r in e.completed]
 
+    def latency_percentiles(self) -> Dict[str, float]:
+        """TTFT/TPOT/e2e percentiles of the requests that *finished* in
+        this pool (a migrated request's TTFT counts where its prefill
+        finally drained)."""
+        return _percentiles(self.completed)
+
+    def measured_totals(self) -> Dict[str, float]:
+        return dict(tokens=sum(e.meter.m_tokens for e in self.engines),
+                    joules=sum(e.meter.m_joules for e in self.engines))
+
     def stats(self) -> Dict[str, float]:
         tok = sum(e.meter.tokens for e in self.engines)
         joules = sum(e.meter.joules for e in self.engines)
@@ -135,6 +192,9 @@ class PoolGroup:
                     completed=sum(len(e.completed) for e in self.engines),
                     preempted=sum(e.preempted for e in self.engines),
                     tokens=tok, joules=round(joules, 1),
+                    m_tokens=sum(e.meter.m_tokens for e in self.engines),
+                    m_joules=round(sum(e.meter.m_joules
+                                       for e in self.engines), 1),
                     tok_per_watt=round(tok / joules, 3) if joules else 0.0,
                     occupancy=round(slot_s / avail, 3) if avail else 0.0,
                     sim_time_s=round(max(times), 3) if times else 0.0)
@@ -149,18 +209,18 @@ class FleetSim:
         self.policy = policy
         self.plan = plan
         pools = sorted(plan.pools, key=lambda p: p.window)
-        if policy.kind == "homo":
-            roles = [("homo", pools[0])]
-        else:
-            assert len(pools) == 2, [p.name for p in pools]
-            roles = [("short", pools[0]), ("long", pools[1])]
+        role_names = topology_roles(policy.kind, plan)
+        roles = list(zip(role_names, pools))
+        self.order = role_names              # ascending-window DAG order
         self.groups: Dict[str, PoolGroup] = {}
-        for role, p in roles:
-            # FleetOpt's overflow headroom ends at the gamma-window: a
-            # short-routed request that outgrows it migrates (preemption +
-            # re-prefill in the long pool).  Other pools truncate at their
-            # window, like the token-level engine.
-            evict = policy.kind == "fleetopt" and role == "short"
+        for idx, (role, p) in enumerate(roles):
+            # Overflow headroom ends at the pool window: a request routed
+            # here that outgrows it migrates one hop up the ladder
+            # (preemption + re-prefill in the next pool).  FleetOpt's short
+            # pool and every non-terminal multipool rung evict; terminal
+            # pools truncate at their window, like the token-level engine.
+            evict = (policy.kind == "fleetopt" and role == "short") \
+                or (policy.kind == "multipool" and idx < len(roles) - 1)
             engines = [
                 PoolEngine(None, None, window=p.window, profile=p.profile,
                            name=f"{p.name}#{j}",
@@ -186,14 +246,14 @@ class FleetSim:
                 e.meter.measure_t0, e.meter.measure_t1 = self._window
         for r in reqs:
             self.router.route(r)
-        # topological order: overflow migrations only flow short -> long
-        order = [r for r in self.groups if r != "long"]
-        order += ["long"] if "long" in self.groups else []
+        # topological order: overflow migrations only flow up the ladder
+        # (pool i -> pool i+1), so draining pools in ascending-window order
+        # sees every migration before its destination runs
         migrated: List[Request] = []
-        for role in order:
+        for role in self.order:
             grp = self.groups[role]
-            if role == "long" and migrated:
-                self.migrations = len(migrated)
+            if migrated:
+                self.migrations += len(migrated)
                 for r in sorted(migrated, key=lambda r: r.ready_time):
                     grp.submit(r)
                 for e in grp.engines:   # keep queues time-sorted for the
@@ -204,9 +264,14 @@ class FleetSim:
                 e.run_until_drained(max_iters=max_iters)
                 migrated.extend(e.overflowed)
                 e.overflowed = []
-        assert not (migrated and "long" in self.groups), \
-            "long pool may not overflow-evict"
+        assert not migrated, "the terminal pool may not overflow-evict"
         return self.report()
+
+    def latency_by_role(self) -> Dict[str, Dict[str, float]]:
+        """Per-pool latency percentiles (SLO-loop attribution: which rung
+        of the ladder is busting the fleet TTFT)."""
+        return {role: self.groups[role].latency_percentiles()
+                for role in self.order}
 
     def report(self) -> Dict[str, dict]:
         out: Dict[str, dict] = {}
@@ -275,17 +340,23 @@ class SimVsAnalytical:
 
 
 def simulate_topology(kind: str, workload: Workload, profile: BaseProfile,
-                      model: ModelSpec, *, b_short: int, gamma: float = 2.0,
+                      model: ModelSpec, *, b_short: int = 4096,
+                      gamma: float = 2.0,
                       n_requests: int = 4000, seed: int = 0,
                       arrival_rate: Optional[float] = None,
                       prefill_chunk: int = 512,
+                      windows: Optional[Sequence[int]] = None,
+                      pool_overrides: Optional[Dict[str, PoolOverride]] = None,
                       long_window: int = LONG_WINDOW) -> SimVsAnalytical:
     """Provision a topology analytically, then measure it end-to-end."""
     if arrival_rate is not None and arrival_rate != workload.arrival_rate:
         workload = dataclasses.replace(workload, arrival_rate=arrival_rate)
+    if kind == "multipool" and windows:
+        long_window = int(max(windows))
     policy, plan = build_topology(kind, workload, profile, model,
                                   b_short=b_short, gamma=gamma,
-                                  long_window=long_window)
+                                  long_window=long_window, windows=windows,
+                                  pool_overrides=pool_overrides)
     sim = FleetSim(policy, plan, model=model, prefill_chunk=prefill_chunk,
                    rng_seed=seed)
     reqs = trace_requests(workload, n_requests, seed=seed,

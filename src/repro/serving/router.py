@@ -1,13 +1,19 @@
 """Context-length router — the paper's technique as a serving-layer feature.
 
-`ContextRouter` fronts a set of PoolEngines and routes each request by its
-context-length prediction, implementing the three §4 topologies:
+`ContextRouter` fronts a set of PoolEngines and routes each request through
+an **ordered admission ladder**: (role, boundary) pairs with strictly
+ascending boundaries, the last infinite.  A request goes to the first role
+whose boundary covers its routing metric.  The three §4 topologies and the
+§10.3 K >= 3 generalisation are all instances of the ladder:
 
-  homo      — one pool, the long window.
-  two_pool  — conservative static split: short iff
-              prompt + p99(output) <= B_short (no overflow handling).
-  fleetopt  — overflow split: short iff predicted total <= gamma * B_short,
-              with the short pool serving window gamma * B_short.
+  homo      — [(only, inf)]: one pool, the long window.
+  two_pool  — [(short, B_short), (long, inf)] on the conservative metric
+              prompt + p99(output) (no overflow handling).
+  fleetopt  — [(short, gamma * B_short), (long, inf)] on predicted total;
+              the short pool serves window gamma * B_short.
+  multipool — explicit K-entry ladder (core.multipool): K geometric
+              windows, admission at window/gamma, per-hop overflow
+              migration pool i -> pool i+1 (serving.fleetsim).
 
 The router is what determines which segment of the logistic P(b) curve each
 engine occupies — the mechanism behind the fleet-level 2.5x (paper §4.2).
@@ -15,9 +21,8 @@ engine occupies — the mechanism behind the fleet-level 2.5x (paper §4.2).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
-
-import numpy as np
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from .engine import PoolEngine
 from .request import Request
@@ -25,33 +30,61 @@ from .request import Request
 
 @dataclasses.dataclass
 class RouterPolicy:
-    kind: str                  # homo | two_pool | fleetopt
+    kind: str                  # homo | two_pool | fleetopt | multipool
     b_short: int = 4096
     gamma: float = 2.0
     p99_output: int = 1024     # conservative two_pool admission margin
+    # K-pool: explicit ordered (role, admission boundary) ladder.  Required
+    # for kind="multipool"; ignored (derived) for the named §4 topologies.
+    ladder: Optional[List[Tuple[str, float]]] = None
+
+    def admission_ladder(self, roles: Sequence[str]
+                         ) -> List[Tuple[str, float]]:
+        """Ordered (role, boundary) pairs; route to the first role whose
+        boundary >= the request's routing metric."""
+        if self.kind == "homo":
+            return [(roles[0], math.inf)]
+        if self.kind == "two_pool":
+            return [("short", float(self.b_short)), ("long", math.inf)]
+        if self.kind == "fleetopt":
+            return [("short", self.gamma * self.b_short), ("long", math.inf)]
+        if self.kind == "multipool":
+            if not self.ladder:
+                raise ValueError("multipool policy needs an explicit ladder")
+            return list(self.ladder)
+        raise ValueError(self.kind)
+
+    def metric(self, req: Request) -> float:
+        """The routing metric: predicted total for overflow-capable
+        topologies; prompt + p99(output) for conservative two_pool."""
+        if self.kind == "two_pool":
+            return req.prompt_len + self.p99_output
+        return req.predicted_total
 
 
 class ContextRouter:
     def __init__(self, pools: Dict[str, PoolEngine], policy: RouterPolicy):
         self.pools = pools
         self.policy = policy
-        if policy.kind != "homo":
-            assert "short" in pools and "long" in pools, sorted(pools)
+        ladder = policy.admission_ladder(list(pools))
+        missing = [r for r, _ in ladder if r not in pools]
+        assert not missing, (missing, sorted(pools))
+        bounds = [b for _, b in ladder]
+        assert all(a < b for a, b in zip(bounds, bounds[1:])), \
+            f"admission boundaries must be strictly ascending: {ladder}"
+        assert math.isinf(bounds[-1]), \
+            f"last ladder entry must admit everything: {ladder}"
 
     def route(self, req: Request) -> str:
-        p = self.policy
-        if p.kind == "homo":
-            name = next(iter(self.pools))
-        elif p.kind == "two_pool":
-            name = ("short" if req.prompt_len + p.p99_output <= p.b_short
-                    else "long")
-        elif p.kind == "fleetopt":
-            name = ("short" if req.predicted_total <= p.gamma * p.b_short
-                    else "long")
-        else:
-            raise ValueError(p.kind)
-        self.pools[name].submit(req)
-        return name
+        # the ladder is re-derived per call so policy mutation (and the
+        # unknown-kind ValueError) behave as if routing were stateless
+        ladder = self.policy.admission_ladder(list(self.pools))
+        m = self.policy.metric(req)
+        for name, boundary in ladder:
+            if m <= boundary:
+                self.pools[name].submit(req)
+                return name
+        raise AssertionError(f"no ladder entry admits metric {m}: {ladder}")
 
     def run(self, requests: List[Request], *, max_iters: int = 100_000
             ) -> Dict[str, dict]:
@@ -62,9 +95,15 @@ class ContextRouter:
         return self.report()
 
     def report(self) -> Dict[str, dict]:
+        """Per-pool stats + fleet roll-up.  The fleet tok/W honours each
+        meter's steady-state measurement window (the windowed `m_*`
+        counters) so it agrees with FleetSim.report on identical runs; with
+        the default (0, inf) window the `m_*` counters mirror the lifetime
+        totals and nothing changes for standalone engines."""
         out = {name: eng.stats() for name, eng in self.pools.items()}
-        tot_tok = sum(s["tokens"] for s in out.values())
-        tot_j = sum(s["joules"] for s in out.values())
+        totals = [eng.measured_totals() for eng in self.pools.values()]
+        tot_tok = sum(t["tokens"] for t in totals)
+        tot_j = sum(t["joules"] for t in totals)
         out["fleet"] = dict(tokens=tot_tok, joules=round(tot_j, 1),
                             tok_per_watt=round(tot_tok / tot_j, 3)
                             if tot_j else 0.0)

@@ -6,7 +6,7 @@ from repro.core import AGENT, AZURE, H100_LLAMA70B, V5E_LLAMA70B, FleetOpt, \
     Homogeneous
 from repro.core.carbon import GRIDS, bill, rank_topologies
 from repro.core.modelspec import LLAMA31_70B
-from repro.core.multipool import MultiPool, sweep_pool_counts
+from repro.core.multipool import MultiPool, ladder_windows, sweep_pool_counts
 
 
 def test_three_pools_beat_two_on_dispersed_traffic():
@@ -27,6 +27,26 @@ def test_pool_count_diminishing_returns():
     gain_12 = tpw[2] / tpw[1]
     gain_23 = tpw[3] / tpw[2]
     assert gain_23 < gain_12                # diminishing returns
+
+
+def test_ladder_windows_dedupes_clamped_rungs():
+    """The 2048-floor clamp used to emit duplicate 2K windows at k >= 5
+    (dead pools with identical names); the ladder is now deduped and every
+    sweep entry reports its *effective* pool count exactly once."""
+    assert ladder_windows(3) == [4096, 16384, 65536]
+    assert ladder_windows(5) == [2048, 4096, 16384, 65536]  # 5 -> 4 rungs
+    ks = [k for k, _ in sweep_pool_counts(AZURE, H100_LLAMA70B, LLAMA31_70B)]
+    assert ks == sorted(set(ks)), ks
+
+
+def test_multipool_rejects_bad_ladders():
+    for windows in ([4096, 4096, 65536], [8192, 4096], []):
+        with pytest.raises(ValueError):
+            MultiPool(windows=windows).provision(AGENT, H100_LLAMA70B,
+                                                 LLAMA31_70B)
+    with pytest.raises(ValueError):   # overflow headroom below 1 is not one
+        MultiPool(windows=[4096, 65536], gamma=0.5).provision(
+            AGENT, H100_LLAMA70B, LLAMA31_70B)
 
 
 def test_carbon_bill():

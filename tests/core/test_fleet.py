@@ -1,10 +1,15 @@
-"""Fleet topology reproduction (paper Table 3 / §4.2 claims)."""
+"""Fleet topology reproduction (paper Table 3 / §4.2 claims) + the
+PoolOverride recalibration surface the SLO loop drives."""
 import pytest
 
 from repro.core import (AZURE, LMSYS, B200_LLAMA70B_FLEET, H100_LLAMA70B,
-                        FleetOpt, Homogeneous, TwoPool, fleet_tpw_analysis,
-                        gain_decomposition, optimize_gamma)
+                        FleetOpt, Homogeneous, PoolOverride, TwoPool,
+                        fleet_tpw_analysis, gain_decomposition,
+                        optimize_gamma)
+from repro.core.fleet import PoolSizing, apply_overrides
 from repro.core.modelspec import LLAMA31_70B
+
+STREAMED = LLAMA31_70B.streamed_params
 
 
 @pytest.fixture(scope="module")
@@ -81,6 +86,51 @@ def test_lmsys_ordering():
         f = FleetOpt(b_short=1536, gamma=2.0).provision(LMSYS, prof,
                                                         LLAMA31_70B)
         assert f.tok_per_watt > 1.4 * h.tok_per_watt
+
+
+def _pool():
+    return PoolSizing(name="p", window=65536, profile=H100_LLAMA70B,
+                      arrival_rate=100.0, mean_output=300.0,
+                      mean_context=4000.0, mean_prompt=1500.0
+                      ).size(streamed_params=STREAMED)
+
+
+def test_recalibrate_only_adds_capacity():
+    pool = _pool()
+    base, tps = pool.instances, pool.tokens_per_s
+    # same MFU: nothing changes
+    pool.recalibrate(streamed_params=STREAMED, prefill_mfu=0.8)
+    assert pool.instances == base
+    # backing the MFU off raises the prefill bound
+    pool.recalibrate(streamed_params=STREAMED, prefill_mfu=0.01)
+    grown = pool.instances
+    assert grown > base and pool.prefill_bound >= grown
+    # ...and provision-time throughput adjustments are preserved
+    assert pool.tokens_per_s == tps
+    # raising the MFU back never shrinks the pool
+    pool.recalibrate(streamed_params=STREAMED, prefill_mfu=0.8)
+    assert pool.instances == grown
+    # instance floor ratchets up, never down
+    pool.recalibrate(streamed_params=STREAMED, min_instances=grown + 7)
+    assert pool.instances == grown + 7
+    pool.recalibrate(streamed_params=STREAMED, min_instances=1)
+    assert pool.instances == grown + 7
+    # HOL inflation raises the Little's-law decode population
+    n_inflight = pool.n_inflight
+    pool.recalibrate(streamed_params=STREAMED, hol_inflation=2.0)
+    assert pool.n_inflight == pytest.approx(2.0 * n_inflight)
+    assert pool.instances >= grown + 7
+
+
+def test_apply_overrides_targets_roles():
+    rep = FleetOpt(b_short=4096, gamma=2.0).provision(
+        AZURE, H100_LLAMA70B, LLAMA31_70B)
+    pools = sorted(rep.pools, key=lambda p: p.window)
+    before = [p.instances for p in pools]
+    apply_overrides(rep, {"long": PoolOverride(min_instances=before[1] + 5)},
+                    roles=["short", "long"], streamed_params=STREAMED)
+    assert pools[0].instances == before[0]
+    assert pools[1].instances == before[1] + 5
 
 
 def test_analyzer_api():

@@ -10,7 +10,8 @@ import pytest
 from repro.core.modelspec import LLAMA31_70B
 from repro.core.profiles import H100_LLAMA70B
 from repro.core.workloads import AGENT, AZURE
-from repro.serving import (FleetSim, PoolEngine, Request, build_topology,
+from repro.serving import (ContextRouter, EnergyMeter, FleetSim, PoolEngine,
+                           PoolGroup, Request, RouterPolicy, build_topology,
                            simulate_topology, trace_requests)
 
 STREAMED = LLAMA31_70B.streamed_params
@@ -144,10 +145,145 @@ def test_overflow_migration_end_to_end():
     assert cell.report["long"]["completed"] >= f["migrations"]
 
 
+def test_multipool_migration_chain_short_mid_long():
+    """K = 3 ladder: a request whose actual total outgrows both the 2K and
+    the 8K windows must migrate twice (pool-2K -> pool-8K -> pool-64K) and
+    still complete in full."""
+    policy, plan = build_topology("multipool", AGENT, H100_LLAMA70B,
+                                  LLAMA31_70B, gamma=2.0,
+                                  windows=[2048, 8192, 65536])
+    assert [p.name for p in sorted(plan.pools, key=lambda p: p.window)] \
+        == ["pool-2K", "pool-8K", "pool-64K"]
+    sim = FleetSim(policy, plan, model=LLAMA31_70B)
+    # predicted total 900 + 100 = 1000 <= 2048/2 -> admitted to pool-2K;
+    # actual total 8900 overflows the 2K window, then the 8K window
+    chain = Request(rid=0, prompt=np.zeros(900, np.int64),
+                    max_new_tokens=8000, arrival_time=0.0,
+                    predicted_output=100)
+    filler = [Request(rid=i, prompt=np.zeros(64, np.int64),
+                      max_new_tokens=16, arrival_time=0.01 * i,
+                      predicted_output=16) for i in range(1, 40)]
+    rep = sim.run([chain] + filler)
+    assert rep["fleet"]["completed"] == 40
+    assert rep["fleet"]["migrations"] == 2      # hops, not unique requests
+    assert chain.preemptions == 2
+    assert chain.pool.startswith("pool-64K")    # finished in the top rung
+    assert chain.n_generated == 8000
+
+
+def test_multipool_end_to_end_on_trace():
+    """A K = 3 plan runs a real trace through FleetSim: every request
+    completes and each rung of the ladder serves traffic."""
+    cell = simulate_topology("multipool", AZURE, H100_LLAMA70B, LLAMA31_70B,
+                             windows=[4096, 16384, 65536], n_requests=1000,
+                             seed=0)
+    f = cell.report["fleet"]
+    assert f["completed"] == 1000
+    roles = [r for r in cell.report if r != "fleet"]
+    assert roles == ["pool-4K", "pool-16K", "pool-64K"]
+    assert all(cell.report[r]["completed"] > 0 for r in roles)
+    assert f["tok_per_watt"] > 0
+
+
+def test_pool_group_balances_by_total_assigned_work():
+    """Regression pin for the intended PoolGroup semantics: replicas are
+    balanced by cumulative *assigned* predicted work (routing happens
+    before any engine runs, so there is no draining to track)."""
+    engines = [PoolEngine(None, None, window=4096, profile=H100_LLAMA70B,
+                          n_slots=4, name=f"e{i}", streamed_params=STREAMED)
+               for i in range(2)]
+    grp = PoolGroup("g", engines)
+    for i, total in enumerate((10, 10, 4, 30)):
+        grp.submit(Request(rid=i, prompt=np.zeros(1, np.int64),
+                           max_new_tokens=1, predicted_output=total - 1))
+    # argmin of cumulative work: e0 <- r0 (10), e1 <- r1 (10),
+    # e0 <- r2 (14), e1 <- r3 (40)
+    assert [r.rid for r in engines[0].queue] == [0, 2]
+    assert [r.rid for r in engines[1].queue] == [1, 3]
+    assert list(grp._pending) == [14.0, 40.0]
+
+
+def test_router_report_honors_measurement_window():
+    """ContextRouter.report and the meters' steady-state window must agree:
+    with an empty window the fleet roll-up reports nothing even though the
+    lifetime totals are non-zero."""
+    eng = PoolEngine(None, None, window=64, profile=H100_LLAMA70B,
+                     n_slots=2, streamed_params=STREAMED)
+    router = ContextRouter({"only": eng}, RouterPolicy(kind="homo"))
+    eng.meter.measure_t1 = 0.0
+    rep = router.run([_req(i, 8, 6) for i in range(3)])
+    assert eng.meter.tokens > 0
+    assert rep["fleet"]["tokens"] == 0
+    assert rep["fleet"]["tok_per_watt"] == 0.0
+
+
+def test_router_and_fleetsim_agree_on_measured_tokens():
+    """The two report paths count the same steady-state window — they can
+    no longer disagree on identical runs (the PR-1 defect)."""
+    policy, plan = build_topology("fleetopt", AZURE, H100_LLAMA70B,
+                                  LLAMA31_70B, b_short=4096)
+    sim = FleetSim(policy, plan, model=LLAMA31_70B)
+    rep = sim.run(trace_requests(AZURE, 600, seed=2))
+    router_rep = sim.router.report()
+    assert router_rep["fleet"]["tokens"] == rep["fleet"]["tokens"]
+    # FleetSim additionally wall-clock-pads idle engines, so its joule
+    # denominator can only be larger (both roll-ups sum raw meter values;
+    # only the final display rounding differs)
+    assert router_rep["fleet"]["joules"] <= rep["fleet"]["joules"] + 0.1
+
+
+# --- prefill energy attribution (EnergyMeter.charge_prefill) ------------
+
+def _prefill_time(n_tokens, mfu=0.8):
+    prof = H100_LLAMA70B
+    return (2.0 * STREAMED * n_tokens
+            / (prof.tp * prof.chip.peak_bf16_flops * mfu))
+
+
+def test_prefill_charged_at_compute_bound_power():
+    m = EnergyMeter(H100_LLAMA70B)
+    m.charge_prefill(1000, streamed_params=STREAMED)
+    t = _prefill_time(1000)
+    nom = H100_LLAMA70B.power_model.p_nom_w
+    assert m.prefill_joules == pytest.approx(nom * t, rel=1e-9)
+    # the old b = 1 decode operating point undercharged by ~2x
+    assert m.prefill_joules > 1.5 * H100_LLAMA70B.power_w(1) * t
+
+
+def test_fully_piggybacked_prefill_attributed_by_real_interval():
+    """A chunk that fully hides behind decode has dt = 0, but its work
+    happened over [sim_time - t, sim_time].  With sim_time just past the
+    window end, the old code midpoint-tested the zero-length dt at
+    sim_time and attributed *nothing*; pro-rating credits the in-window
+    share of the real interval."""
+    m = EnergyMeter(H100_LLAMA70B)
+    t = _prefill_time(100)
+    m.sim_time_s = 5.0
+    m.measure_t0, m.measure_t1 = 0.0, 5.0 - t / 2.0  # half interval inside
+    dt = m.charge_prefill(100, streamed_params=STREAMED, overlap_s=1e9)
+    assert dt == 0.0
+    assert m.prefill_joules > 0
+    assert m.m_prefill_joules == pytest.approx(0.5 * m.prefill_joules,
+                                               rel=1e-9)
+
+
+def test_boundary_straddling_prefill_prorated():
+    """A charge interval straddling the window boundary is attributed by
+    exact overlap, like charge_idle — not all-or-nothing."""
+    m = EnergyMeter(H100_LLAMA70B)
+    t = _prefill_time(4096)
+    m.measure_t0, m.measure_t1 = 0.0, t / 2.0   # half the interval inside
+    m.charge_prefill(4096, streamed_params=STREAMED)
+    assert m.m_prefill_joules == pytest.approx(0.5 * m.prefill_joules,
+                                               rel=1e-9)
+
+
 def test_build_topology_rejects_unknown_kind():
     with pytest.raises(ValueError):
         build_topology("nope", AZURE, H100_LLAMA70B, LLAMA31_70B,
                        b_short=4096)
+    with pytest.raises(ValueError):   # multipool without a window ladder
+        build_topology("multipool", AZURE, H100_LLAMA70B, LLAMA31_70B)
 
 
 def test_trace_requests_clips_and_predicts():

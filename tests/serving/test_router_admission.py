@@ -1,6 +1,8 @@
 """RouterPolicy admission boundaries — exact edges for all three §4
-topologies, against analytical-mode engines (no model, no jax on the hot
-path)."""
+topologies plus the K >= 3 multipool ladder, against analytical-mode
+engines (no model, no jax on the hot path)."""
+import math
+
 import numpy as np
 import pytest
 
@@ -74,3 +76,56 @@ def test_unknown_policy_kind_raises():
     r.policy = RouterPolicy(kind="nope")
     with pytest.raises(ValueError):
         r.route(_req(0, 1, 1))
+
+
+# --- K >= 3 admission ladders (paper §10.3 via core.multipool) -----------
+
+def _k3_pools():
+    return {"p0": _pool("p0", 128), "p1": _pool("p1", 512),
+            "p2": _pool("p2", 2048)}
+
+
+def _k3_router():
+    ladder = [("p0", 64.0), ("p1", 256.0), ("p2", math.inf)]
+    return ContextRouter(_k3_pools(),
+                         RouterPolicy(kind="multipool", ladder=ladder))
+
+
+def test_multipool_ladder_boundaries_are_exact():
+    r = _k3_router()
+    assert r.route(_req(0, 32, 32)) == "p0"     # 64 == boundary, inclusive
+    assert r.route(_req(1, 33, 32)) == "p1"     # 65 > 64
+    assert r.route(_req(2, 128, 128)) == "p1"   # 256 == boundary, inclusive
+    assert r.route(_req(3, 129, 128)) == "p2"   # 257 > 256
+    assert r.route(_req(4, 10_000, 1)) == "p2"  # terminal rung takes all
+
+
+def test_multipool_routes_on_prediction_not_actual_length():
+    r = _k3_router()
+    # predicted 30 + 30 = 60 <= 64 -> p0, though the actual total is 530
+    assert r.route(_req(0, 30, 500, predicted=30)) == "p0"
+    assert r.route(_req(1, 30, 5, predicted=400)) == "p2"
+
+
+def test_multipool_policy_requires_ladder():
+    with pytest.raises(ValueError):
+        ContextRouter({"p0": _pool("p0", 128)},
+                      RouterPolicy(kind="multipool"))
+
+
+def test_ladder_must_ascend_and_terminate_infinite():
+    pools = _k3_pools()
+    with pytest.raises(AssertionError):   # descending boundaries
+        ContextRouter(pools, RouterPolicy(
+            kind="multipool",
+            ladder=[("p0", 256.0), ("p1", 64.0), ("p2", math.inf)]))
+    with pytest.raises(AssertionError):   # last rung not infinite
+        ContextRouter(pools, RouterPolicy(
+            kind="multipool", ladder=[("p0", 64.0), ("p1", 256.0)]))
+
+
+def test_ladder_roles_must_exist():
+    with pytest.raises(AssertionError):
+        ContextRouter({"p0": _pool("p0", 128)},
+                      RouterPolicy(kind="multipool",
+                                   ladder=[("nope", math.inf)]))
