@@ -20,8 +20,22 @@ sweep covers H100/H200/B200 x homo/fleetopt/multipool(K=3) on Azure, so
 the §4.2 generation-gain claim (B200/H100 ~ 1.7x) is re-measured under
 the latency constraint.
 
+Table C (disaggregation, §10.3) serves prefill/decode disaggregation
+through FleetSim: homo vs fleetopt vs disagg vs disagg+fleetopt on
+Azure/H100, analytical (whole-fleet and decode-only) vs measured vs
+SLO-constrained, with the KV-handoff energy the interconnect really
+charges.  Gates: every disagg cell's measured TTFT p99 <= 500 ms after
+size_to_slo; if disagg+fleetopt's measured all-in tok/W falls short of
+plain fleetopt's, the bench prints the shortfall and the KV-handoff cost
+that (partially) explains it instead of failing.
+
+`--json PATH` dumps {"meta", "rows"} for CI's perf-regression diff
+(benchmarks/perf_diff.py --fleet against the committed
+benchmarks/results/fleet_sim.json, which is regenerated with
+`--quick --json benchmarks/results/fleet_sim.json`).
+
 Standalone:  PYTHONPATH=src python benchmarks/fleet_sim_bench.py
-             [--n-requests N] [--slo-requests N] [--quick]
+             [--n-requests N] [--slo-requests N] [--quick] [--json PATH]
 Harness:     PYTHONPATH=src python -m benchmarks.run --only fleet_sim
 """
 import sys
@@ -39,7 +53,19 @@ TOPOLOGIES = ("homo", "two_pool", "fleetopt")
 GENERATIONS = (("H100", H100_LLAMA70B), ("H200", H200_LLAMA70B),
                ("B200", B200_LLAMA70B_FLEET))
 SLO_TOPOLOGIES = ("homo", "fleetopt", "multipool")
+DISAGG_TOPOLOGIES = ("disagg", "disagg_fleetopt")
 K_POOLS = 3
+
+
+def disagg_vs_fleetopt(rows):
+    """(disagg rows, unconstrained Azure rows) keyed by topology — the one
+    place the Table C comparison cells are looked up (run() derives the
+    acceptance ratio from them, main() prints the verdict)."""
+    dis = {r["topology"]: r for r in rows if r["table"] == "disagg"}
+    az_a = {r["topology"]: r for r in rows
+            if r["table"] == "unconstrained"
+            and r.get("workload") == "azure-conv"}
+    return dis, az_a
 
 
 def _slo_cell(kind: str, profile, *, n_requests: int, seed: int):
@@ -72,6 +98,33 @@ def run(n_requests: int = 10_000, slo_requests: int = 3000, seed: int = 0):
             res = _slo_cell(kind, prof, n_requests=slo_requests, seed=seed)
             slo[(gen, kind)] = res
             rows.append(dict(res.row(), table="slo", generation=gen))
+    # Table C: disaggregation on Azure/H100 (homo/fleetopt cells reuse
+    # Table A measured + Table B SLO numbers; only the disagg kinds add
+    # simulation + SLO-loop work)
+    for kind in DISAGG_TOPOLOGIES:
+        cell = simulate_topology(
+            kind, AZURE, H100_LLAMA70B, LLAMA31_70B,
+            b_short=B_SHORT[AZURE.name], n_requests=n_requests, seed=seed)
+        res = size_to_slo(kind, AZURE, H100_LLAMA70B, LLAMA31_70B,
+                          b_short=B_SHORT[AZURE.name],
+                          n_requests=slo_requests, seed=seed)
+        f = cell.report["fleet"]
+        rows.append(dict(
+            table="disagg", workload=AZURE.name, topology=kind,
+            analytical=round(cell.analytical_tok_per_watt, 2),
+            analytical_fleet=round(cell.analytical_fleet_tok_per_watt, 2),
+            simulated=round(cell.sim_decode_tok_per_watt, 2),
+            delta_pct=round(cell.delta_pct, 1),
+            all_in=round(cell.sim_tok_per_watt, 2),
+            ttft_p99_s=f.get("ttft_p99_s", 0.0),
+            handoffs=f["handoffs"], migrations=f["migrations"],
+            kv_handoff_joules=f["kv_handoff_joules"],
+            kv_handoff_energy_frac=f["kv_handoff_energy_frac"],
+            slo_feasible=round(res.slo_tok_per_watt, 2),
+            slo_measured_all_in=round(res.measured_tok_per_watt, 2),
+            slo_ttft_p99_s=round(res.ttft_p99_s, 3),
+            slo_added=res.instances_added,
+            slo_compliant=res.compliant))
     az = {r["topology"]: r["simulated"] for r in rows
           if r.get("workload") == "azure-conv"
           and r["table"] == "unconstrained"}
@@ -81,25 +134,37 @@ def run(n_requests: int = 10_000, slo_requests: int = 3000, seed: int = 0):
     gen_gain = {k: (slo[("B200", k)].slo_tok_per_watt
                     / slo[("H100", k)].slo_tok_per_watt)
                 for k in SLO_TOPOLOGIES}
+    dis, az_a = disagg_vs_fleetopt(rows)
+    dfo, fo = dis["disagg_fleetopt"]["all_in"], az_a["fleetopt"]["all_in"]
     derived = (f"simulated fleetopt/homo on Azure = {ratio:.2f}x "
                f"(acceptance >= 2x); SLO-constrained = {slo_ratio:.2f}x; "
                f"B200/H100 gain under SLO: "
-               + ", ".join(f"{k} {v:.2f}x" for k, v in gen_gain.items()))
+               + ", ".join(f"{k} {v:.2f}x" for k, v in gen_gain.items())
+               + f"; disagg+fleetopt/fleetopt all-in = {dfo / fo:.2f}x")
     return rows, derived
 
 
 def main(argv=None) -> None:
     import argparse
+    import json
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--n-requests", type=int, default=10_000)
     ap.add_argument("--slo-requests", type=int, default=3000)
     ap.add_argument("--quick", action="store_true",
                     help="1k-request (1.5k SLO) smoke run (CI)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="dump {'meta', 'rows'} JSON (the CI perf-"
+                         "regression baseline/current format)")
     args = ap.parse_args(argv)
     n = 1000 if args.quick else args.n_requests
     n_slo = 1500 if args.quick else args.slo_requests
     rows, derived = run(n_requests=n, slo_requests=n_slo, seed=args.seed)
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump({"meta": dict(n_requests=n, slo_requests=n_slo,
+                                    seed=args.seed, quick=args.quick),
+                       "rows": rows}, fh, indent=1)
 
     print("=== Table A: unconstrained (H100) ===")
     hdr = (f"{'workload':12s} {'topology':9s} {'analytic':>8s} {'simulated':>9s}"
@@ -126,6 +191,44 @@ def main(argv=None) -> None:
               f" {r['ttft_p99_s']:9.3f} {r['instances']:5d}"
               f" {r['added']:5d} {r['rounds']:4d}"
               + ("" if r["compliant"] else "  NON-COMPLIANT"))
+
+    print("\n=== Table C: prefill/decode disaggregation (Azure, H100) ===")
+    dis, az_a = disagg_vs_fleetopt(rows)
+    slo_b = {r["topology"]: r for r in slo_rows
+             if r["generation"] == "H100"}
+    dis_rows = list(dis.values())
+    hdr = (f"{'topology':16s} {'an.fleet':>8s} {'an.dec':>7s} {'simul':>7s}"
+           f" {'all-in':>7s} {'SLO-ok':>7s} {'ttft(SLO)':>10s}"
+           f" {'kvJ':>8s} {'hoffs':>6s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for kind in ("homo", "fleetopt"):
+        a, b = az_a[kind], slo_b[kind]
+        print(f"{kind:16s} {a['analytical']:8.2f} {a['analytical']:7.2f}"
+              f" {a['simulated']:7.2f} {a['all_in']:7.2f}"
+              f" {b['slo_feasible']:7.2f} {b['ttft_p99_s']:10.3f}"
+              f" {'-':>8s} {'-':>6s}")
+    for kind in ("disagg", "disagg_fleetopt"):
+        r = dis[kind]
+        print(f"{kind:16s} {r['analytical_fleet']:8.2f}"
+              f" {r['analytical']:7.2f} {r['simulated']:7.2f}"
+              f" {r['all_in']:7.2f} {r['slo_feasible']:7.2f}"
+              f" {r['slo_ttft_p99_s']:10.3f}"
+              f" {r['kv_handoff_joules']:8.1f} {r['handoffs']:6d}"
+              + ("" if r["slo_compliant"] else "  NON-COMPLIANT"))
+    dfo, fo = dis["disagg_fleetopt"]["all_in"], az_a["fleetopt"]["all_in"]
+    if dfo >= fo:
+        print(f"measured: disagg+fleetopt all-in tok/W beats interleaved "
+              f"fleetopt ({dfo:.2f} vs {fo:.2f}, +{100 * (dfo / fo - 1):.1f}%)"
+              f" — prefill interference removed from the decode pools")
+    else:
+        r = dis["disagg_fleetopt"]
+        print(f"measured: disagg+fleetopt all-in tok/W falls short of "
+              f"interleaved fleetopt ({dfo:.2f} vs {fo:.2f}, "
+              f"{100 * (dfo / fo - 1):.1f}%) — the dedicated prefill fleet "
+              f"burns saturated watts the interleave absorbed; KV handoff "
+              f"adds {r['kv_handoff_joules']:.1f} J "
+              f"({100 * r['kv_handoff_energy_frac']:.3f}% of fleet energy)")
     print(derived)
 
     # acceptance gates -----------------------------------------------------
@@ -142,6 +245,11 @@ def main(argv=None) -> None:
               for r in slo_rows}
     if slo_az[("H100", "fleetopt")] < 2.0 * slo_az[("H100", "homo")]:
         fails.append("SLO-constrained fleetopt < 2x homo on Azure (H100)")
+    bad_dis = [r["topology"] for r in dis_rows
+               if not r["slo_compliant"] or r["slo_ttft_p99_s"] > 0.5]
+    if bad_dis:
+        fails.append(f"disagg cells violate the TTFT SLO after"
+                     f" size_to_slo: {bad_dis}")
     if fails:
         sys.exit("ACCEPTANCE FAIL: " + "; ".join(fails))
 

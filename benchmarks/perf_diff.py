@@ -1,12 +1,40 @@
-"""Perf-iteration helper: diff two dry-run result JSONs (before/after a
-change) on the three roofline terms.
+"""Perf-iteration helpers.
 
-  PYTHONPATH=src python -m benchmarks.perf_diff \
-      benchmarks/results/dryrun_baseline/yi-6b_decode_32k_pod16x16.json \
-      benchmarks/results/dryrun/yi-6b_decode_32k_pod16x16.json
+Two modes:
+
+1. Dry-run roofline diff (legacy): diff two dry-run result JSONs
+   (before/after a change) on the three roofline terms.
+
+     PYTHONPATH=src python -m benchmarks.perf_diff \
+         benchmarks/results/dryrun_baseline/yi-6b_decode_32k_pod16x16.json \
+         benchmarks/results/dryrun/yi-6b_decode_32k_pod16x16.json
+
+2. Fleet tok/W regression gate (CI): diff a fresh
+   `fleet_sim_bench.py --quick --json` dump against the committed
+   baseline, cell by cell, and exit non-zero when any tok/W cell drifts
+   beyond the tolerance.  Runs are seeded and deterministic, so any
+   drift is a real code-behaviour change: a drop is a perf regression; a
+   rise means the baseline is stale and must be regenerated (with
+   `--quick --json benchmarks/results/fleet_sim.json`) so the gate keeps
+   teeth.
+
+     PYTHONPATH=src python -m benchmarks.perf_diff --fleet \
+         benchmarks/results/fleet_sim.json current.json [--tolerance 10]
+
+   Accepts both the bench's {"meta", "rows"} dump and the bare row list
+   `benchmarks/run.py` writes.  A cell is keyed by
+   (table, generation, workload, topology); its metric is the row's
+   primary tok/W field (`simulated` for measured tables, `slo_feasible`
+   for SLO tables).
 """
+import argparse
 import json
 import sys
+
+# tok/W metrics gated per row: measured (simulated) and SLO-constrained
+# (slo_feasible) are diffed independently when a row carries both (disagg
+# rows do); tok_per_watt is the fallback for plain FleetReport-style rows
+_METRIC_FIELDS = ("simulated", "slo_feasible", "tok_per_watt")
 
 
 def diff(a_path: str, b_path: str) -> dict:
@@ -27,5 +55,81 @@ def diff(a_path: str, b_path: str) -> dict:
     return out
 
 
+def _fleet_cells(path: str) -> dict:
+    data = json.loads(open(path).read())
+    rows = data["rows"] if isinstance(data, dict) else data
+    cells = {}
+    for r in rows:
+        if not isinstance(r, dict) or "topology" not in r:
+            continue
+        key = "/".join(str(r.get(k, "")) for k in
+                       ("table", "generation", "workload", "topology"))
+        present = [f for f in _METRIC_FIELDS[:2] if f in r]
+        if not present and _METRIC_FIELDS[2] in r:
+            present = [_METRIC_FIELDS[2]]
+        for f in present:
+            cells[f"{key}:{f}"] = float(r[f])
+    return cells
+
+
+def fleet_diff(base_path: str, cur_path: str,
+               tolerance_pct: float = 10.0) -> dict:
+    base, cur = _fleet_cells(base_path), _fleet_cells(cur_path)
+    cells, out_of_tol = [], []
+    for key in sorted(base):
+        if key not in cur:
+            continue
+        b, c = base[key], cur[key]
+        delta = 100.0 * (c / b - 1.0) if b else (0.0 if not c else 1e9)
+        cell = dict(cell=key, baseline=b, current=round(c, 3),
+                    delta_pct=round(delta, 2))
+        cells.append(cell)
+        if abs(delta) > tolerance_pct:
+            out_of_tol.append(cell)
+    missing = sorted(set(base) - set(cur))
+    new = sorted(set(cur) - set(base))
+    return dict(tolerance_pct=tolerance_pct, cells=cells,
+                out_of_tolerance=out_of_tol, missing_in_current=missing,
+                new_in_current=new,
+                ok=not (out_of_tol or missing))
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fleet", action="store_true",
+                    help="fleet tok/W regression mode")
+    ap.add_argument("--tolerance", type=float, default=10.0,
+                    help="max abs tok/W drift per cell, percent")
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    args = ap.parse_args(argv)
+    if not args.fleet:
+        print(json.dumps(diff(args.baseline, args.current), indent=2))
+        return
+    rep = fleet_diff(args.baseline, args.current,
+                     tolerance_pct=args.tolerance)
+    print(json.dumps(rep, indent=2))
+    if not rep["ok"]:
+        regressed = [c for c in rep["out_of_tolerance"]
+                     if c["delta_pct"] < 0]
+        improved = [c for c in rep["out_of_tolerance"]
+                    if c["delta_pct"] >= 0]
+        msgs = []
+        if regressed:
+            msgs.append("tok/W REGRESSION: "
+                        + ", ".join(f"{c['cell']} {c['delta_pct']:+.1f}%"
+                                    for c in regressed))
+        if improved:
+            msgs.append("tok/W improved beyond tolerance (regenerate the "
+                        "baseline with `fleet_sim_bench.py --quick --json "
+                        "benchmarks/results/fleet_sim.json`): "
+                        + ", ".join(f"{c['cell']} {c['delta_pct']:+.1f}%"
+                                    for c in improved))
+        if rep["missing_in_current"]:
+            msgs.append("cells missing from current run: "
+                        + ", ".join(rep["missing_in_current"]))
+        sys.exit("; ".join(msgs))
+
+
 if __name__ == "__main__":
-    print(json.dumps(diff(sys.argv[1], sys.argv[2]), indent=2))
+    main()

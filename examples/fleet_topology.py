@@ -4,10 +4,12 @@ Evaluates Homo / Pool / FleetOpt on H100 & B200 over all three workload
 archetypes, decomposes topology x generation gains (§4.2), compares
 semantic vs context routing (§5.1), closes the loop with the event-driven
 fleet simulator measuring the Azure topologies end-to-end (serving
-.fleetsim) against the closed-form sizing that provisioned them, and ends
-with the SLO-constrained sizing loop (core.slo): the fleets re-provisioned
-until their *measured* TTFT p99 actually meets the paper's 500 ms target,
-including a K = 3 multipool ladder (§10.3).
+.fleetsim) against the closed-form sizing that provisioned them — now
+including §10.3 prefill/decode disaggregation with its KV-handoff hop —
+and ends with the SLO-constrained sizing loop (core.slo): the fleets
+re-provisioned until their *measured* TTFT p99 actually meets the paper's
+500 ms target, including a K = 3 multipool ladder and a disaggregated
+fleet whose prefill/decode sides re-provision independently (§10.3).
 
   PYTHONPATH=src python examples/fleet_topology.py [--sim-requests N]
 """
@@ -41,6 +43,29 @@ def simulated_crosscheck(n_requests: int = 4000) -> None:
           f"{sim_tpw['fleetopt'] / sim_tpw['homo']:.2f}x")
 
 
+def disaggregated_serving(n_requests: int = 4000) -> None:
+    """§10.3 Splitwise: prefill/decode disaggregation served end-to-end —
+    dedicated prefill pools, the KV-handoff hop over the interconnect,
+    decode pools with zero prefill interference."""
+    from repro.serving import simulate_topology
+
+    print(f"\n=== disaggregated prefill/decode (Azure, H100, "
+          f"{n_requests} requests) ===")
+    for kind in ("disagg", "disagg_fleetopt"):
+        cell = simulate_topology(kind, AZURE, H100_LLAMA70B, LLAMA31_70B,
+                                 b_short=4096, n_requests=n_requests)
+        f = cell.report["fleet"]
+        print(f"  {kind:15s} analytical fleet "
+              f"{cell.analytical_fleet_tok_per_watt:5.2f}"
+              f" / decode-only {cell.analytical_tok_per_watt:5.2f}"
+              f" | measured decode {cell.sim_decode_tok_per_watt:5.2f}"
+              f" ({cell.delta_pct:+.1f}%) all-in {cell.sim_tok_per_watt:5.2f}"
+              f"\n{'':17s} TTFT p99 {f.get('ttft_p99_s', 0.0):.3f}s"
+              f" | {f['handoffs']} KV handoffs moved {f['kv_handoff_gb']:.1f}"
+              f" GB costing {f['kv_handoff_joules']:.1f} J"
+              f" ({100 * f['kv_handoff_energy_frac']:.3f}% of fleet energy)")
+
+
 def slo_constrained_sizing(n_requests: int = 2000) -> None:
     """Fix the TTFT-SLO violation: re-provision until the measured p99
     complies, and report the tok/W price of compliance."""
@@ -50,6 +75,8 @@ def slo_constrained_sizing(n_requests: int = 2000) -> None:
               dict(b_short=4096)),
              ("H100", H100_LLAMA70B, "multipool",
               dict(windows=ladder_windows(3))),
+             ("H100", H100_LLAMA70B, "disagg_fleetopt",
+              dict(b_short=4096)),
              ("B200", B200_LLAMA70B_FLEET, "fleetopt",
               dict(b_short=4096)))
     for gen, prof, kind, kw in cells:
@@ -107,6 +134,7 @@ def main(sim_requests: int = 4000):
           f"({sem.instances} instances; quality question, not tok/W — §5.1)")
 
     simulated_crosscheck(n_requests=sim_requests)
+    disaggregated_serving(n_requests=sim_requests)
     slo_constrained_sizing(n_requests=max(sim_requests // 2, 1000))
 
 

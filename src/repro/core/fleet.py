@@ -38,6 +38,10 @@ RHO_OP = 0.85           # operating utilization for the power term
 # the loop by recalibrating an *effective* per-pool prefill MFU against the
 # measured FleetSim TTFT (see DESIGN.md §5).
 PREFILL_MFU = 0.8
+# Dedicated prefill-phase pools (core.disagg) run compute-saturated: power
+# is drawn near the logistic's P_nom asymptote, not at the decode operating
+# point (batch-formation gaps keep it a hair under full saturation).
+PREFILL_SATURATION = 0.97
 
 
 @dataclasses.dataclass
@@ -52,6 +56,13 @@ class PoolSizing:
     mean_context: float          # mean KV length during decode
     mean_prompt: float           # tokens (prefill load)
     hol_inflation: float = 1.0
+    # "decode" (default) or "prefill" — a prefill-phase pool (core.disagg)
+    # is a compute-bound chunk processor: it is sized by the prefill bound
+    # alone and draws saturated power instead of the decode operating point.
+    phase: str = "decode"
+    # physical MFU the prefill-phase *engines* run at (serving.fleetsim);
+    # immutable under SLO recalibration, which only moves the sizing MFU.
+    prefill_engine_mfu: Optional[float] = None
     # computed:
     instances: int = 0
     n_active: float = 0.0
@@ -94,6 +105,13 @@ class PoolSizing:
 
     def _operating_point(self) -> None:
         nmax = self.profile.n_max(self.window)
+        if self.phase == "prefill":
+            # compute-bound: the profile's own concurrency ceiling and the
+            # near-saturated end of its logistic (Eq. 1 as b -> inf)
+            self.n_active = RHO_OP * nmax
+            self.power_w_per_instance = \
+                self.profile.power_model.p_nom_w * PREFILL_SATURATION
+            return
         self.n_active = min(self.n_inflight / self.instances, RHO_OP * nmax)
         self.power_w_per_instance = self.profile.power_w(self.n_active)
 

@@ -22,7 +22,11 @@ never loosened — the loop only ever *adds* instances, so it terminates
 monotone in the number of rounds.  See DESIGN.md §5/§6.
 
 The loop works for every router topology FleetSim can serve: homo,
-two_pool, fleetopt and K >= 3 multipool ladders (paper §10.3).
+two_pool, fleetopt, K >= 3 multipool ladders and the prefill/decode
+disaggregated kinds (paper §10.3).  For disaggregated fleets the prefill
+and decode fleets re-provision *independently*: TTFT violations grow the
+prefill pools (they drain the prompt), TPOT violations (when
+`SLOSpec.tpot_p99_ms` is set) grow the decode pools.
 """
 from __future__ import annotations
 
@@ -49,9 +53,16 @@ _MIN_MFU = 0.02
 
 @dataclasses.dataclass(frozen=True)
 class SLOSpec:
-    """Latency service-level objective (paper §4: P99 TTFT <= 500 ms)."""
+    """Latency service-level objective (paper §4: P99 TTFT <= 500 ms).
+
+    `tpot_p99_ms` optionally constrains the P99 time-per-output-token the
+    meters already report (None = TTFT-only, the paper's constraint).  In
+    a disaggregated fleet the two constraints pull on different pools:
+    prefill instances drive TTFT, decode instances drive TPOT.
+    """
 
     ttft_p99_s: float = 0.5
+    tpot_p99_ms: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -62,11 +73,12 @@ class SLORound:
     instances: Dict[str, int]            # role -> provisioned instances
     ttft_p99_s: float                    # measured, fleet-wide
     per_pool_ttft_p99_s: Dict[str, float]
-    violators: Dict[str, int]            # role -> #requests with TTFT > SLO
+    violators: Dict[str, int]            # role -> attributed SLO violations
     budget: int                          # fleet-wide violator allowance
     analytical_tok_per_watt: float       # of this round's (adjusted) plan
     measured_tok_per_watt: float         # all-in, steady-state window
     measured_decode_tok_per_watt: float
+    tpot_p99_ms: float = 0.0             # measured, fleet-wide
 
 
 @dataclasses.dataclass
@@ -127,6 +139,8 @@ class SLOSizingResult:
                     cost_pct=round(self.compliance_cost_pct, 1),
                     measured=round(self.measured_decode_tok_per_watt, 2),
                     ttft_p99_s=round(self.ttft_p99_s, 3),
+                    tpot_p99_ms=round(float(
+                        self.report["fleet"].get("tpot_p99_ms", 0.0)), 3),
                     instances=self.plan.instances,
                     added=self.instances_added,
                     rounds=len(self.rounds),
@@ -168,6 +182,7 @@ def size_to_slo(kind: str, workload: Workload, profile: BaseProfile,
     overrides: Dict[str, PoolOverride] = {}
     rounds: List[SLORound] = []
     unconstrained: Optional[FleetReport] = None
+    base_mfu: Dict[str, float] = {}
     policy = plan = report = sim = None
     compliant = False
     prev_violators: Dict[str, int] = {}
@@ -183,36 +198,59 @@ def size_to_slo(kind: str, workload: Workload, profile: BaseProfile,
             # (later rounds re-provision fresh PoolSizing objects, so it
             # is never mutated again)
             unconstrained = plan
+            # MFU backoff starts from each pool's *sized* MFU, not the
+            # global closed-form constant (a disagg prefill pool may have
+            # been provisioned at its own dedicated-prefill MFU)
+            base_mfu = {role: pool.sized_prefill_mfu
+                        for role, pool in zip(
+                            topology_roles(kind, plan),
+                            sorted(plan.pools, key=lambda p: p.window))}
         sim = FleetSim(policy, plan, model=model,
                        prefill_chunk=prefill_chunk, rng_seed=seed)
         reqs = trace_requests(workload, n_requests, seed=seed,
                               max_total=long_window)
         report = sim.run(reqs)
         fleet_p99 = float(report["fleet"].get("ttft_p99_s", 0.0))
+        fleet_tpot = float(report["fleet"].get("tpot_p99_ms", 0.0))
         per_pool = {role: float(lat.get("ttft_p99_s", 0.0))
                     for role, lat in sim.latency_by_role().items()}
         # violation attribution: the fleet p99 <= SLO iff at most
-        # floor(1% of completions) requests exceed the SLO — count each
-        # pool's contribution to that fleet-wide violator budget
-        violators = {
-            role: sum(1 for r in sim.groups[role].completed
-                      if r.first_token_time - r.arrival_time
-                      > slo.ttft_p99_s)
-            for role in sim.order}
-        n_done = sum(len(sim.groups[role].completed) for role in sim.order)
-        budget = int(0.01 * n_done)
+        # floor(1% of observations) exceed the SLO — count each pool's
+        # contribution to that fleet-wide violator budget.  A TTFT
+        # violation is attributed to the pool that drained the request's
+        # prefill (in a disagg fleet that is the prefill pool: decode
+        # capacity cannot buy TTFT there); a TPOT violation (when the SLO
+        # constrains TPOT) to the pool that decoded the request.
+        violators = {role: 0 for role in sim.order}
+        observations = {role: 0 for role in sim.order}
+        for role in sim.order:
+            for r in sim.groups[role].completed:
+                ttft_role = r.prefill_role \
+                    if r.prefill_role in violators else role
+                observations[ttft_role] += 1
+                if r.first_token_time - r.arrival_time > slo.ttft_p99_s:
+                    violators[ttft_role] += 1
+                if slo.tpot_p99_ms is not None and r.n_generated > 1:
+                    observations[role] += 1
+                    tpot_ms = 1e3 * (r.finish_time - r.first_token_time) \
+                        / (r.n_generated - 1)
+                    if tpot_ms > slo.tpot_p99_ms:
+                        violators[role] += 1
+        n_obs = max(sum(observations.values()), 1)
+        budget = int(0.01 * n_obs)
         rounds.append(SLORound(
             round=round_i,
             instances={role: len(sim.groups[role].engines)
                        for role in sim.order},
-            ttft_p99_s=fleet_p99,
+            ttft_p99_s=fleet_p99, tpot_p99_ms=fleet_tpot,
             per_pool_ttft_p99_s=per_pool,
             violators=violators, budget=budget,
             analytical_tok_per_watt=plan.tok_per_watt,
             measured_tok_per_watt=float(report["fleet"]["tok_per_watt"]),
             measured_decode_tok_per_watt=float(
                 report["fleet"]["decode_tok_per_watt"])))
-        if fleet_p99 <= slo.ttft_p99_s:
+        if fleet_p99 <= slo.ttft_p99_s and (
+                slo.tpot_p99_ms is None or fleet_tpot <= slo.tpot_p99_ms):
             compliant = True
             break
         # a pool that was grown last round but whose violator count did
@@ -221,12 +259,11 @@ def size_to_slo(kind: str, workload: Workload, profile: BaseProfile,
         saturated |= {role for role in grown_last
                       if violators.get(role, 0)
                       >= prev_violators.get(role, 0)}
-        # grow pools holding more than their completion-weighted share of
+        # grow pools holding more than their observation-weighted share of
         # the fleet violator budget; fall back to the biggest contributor
         violating = [
             role for role in sim.order
-            if violators[role] > budget
-            * (len(sim.groups[role].completed) / max(n_done, 1))
+            if violators[role] > budget * (observations[role] / n_obs)
             and role not in saturated]
         if not violating:
             violating = [r for r in sorted(violators, key=violators.get,
@@ -234,14 +271,18 @@ def size_to_slo(kind: str, workload: Workload, profile: BaseProfile,
                          if violators[r] > 0 and r not in saturated][:1]
         if not violating:            # every contributor is saturated:
             break                    # capacity cannot buy this SLO
-        step = min(max(fleet_p99 / slo.ttft_p99_s, _MIN_STEP), _MAX_STEP)
+        overshoot = fleet_p99 / slo.ttft_p99_s
+        if slo.tpot_p99_ms:
+            overshoot = max(overshoot, fleet_tpot / slo.tpot_p99_ms)
+        step = min(max(overshoot, _MIN_STEP), _MAX_STEP)
         roles = topology_roles(kind, plan)
         for role in violating:
             if role not in roles:    # defensive: role vanished from plan
                 continue
+            start_mfu = base_mfu.get(role, PREFILL_MFU)
             o = overrides.setdefault(
-                role, PoolOverride(prefill_mfu=PREFILL_MFU))
-            o.prefill_mfu = max((o.prefill_mfu or PREFILL_MFU) / step,
+                role, PoolOverride(prefill_mfu=start_mfu))
+            o.prefill_mfu = max((o.prefill_mfu or start_mfu) / step,
                                 _MIN_MFU)
             # the MFU backoff only bites once the prefill bound binds, so
             # also ratchet the instance floor by the same step (at least

@@ -1,11 +1,13 @@
 from .energy import EnergyMeter
 from .engine import PoolEngine
-from .fleetsim import (FleetSim, PoolGroup, SimVsAnalytical, build_topology,
+from .fleetsim import (FleetSim, PoolGroup, SimVsAnalytical,
+                       analytical_decode_tok_per_watt, build_topology,
                        simulate_topology, topology_roles, trace_requests)
 from .request import Request, synthetic_requests
 from .router import ContextRouter, RouterPolicy
 
 __all__ = ["EnergyMeter", "PoolEngine", "Request", "synthetic_requests",
            "ContextRouter", "RouterPolicy", "FleetSim", "PoolGroup",
-           "SimVsAnalytical", "build_topology", "simulate_topology",
-           "topology_roles", "trace_requests"]
+           "SimVsAnalytical", "analytical_decode_tok_per_watt",
+           "build_topology", "simulate_topology", "topology_roles",
+           "trace_requests"]

@@ -32,6 +32,9 @@ class EnergyMeter:
     joules: float = 0.0
     idle_joules: float = 0.0
     prefill_joules: float = 0.0
+    handoff_joules: float = 0.0   # KV-migration interconnect energy
+    handoff_bytes: float = 0.0
+    m_handoff_bytes: float = 0.0  # in-window share (pro-rated like joules)
     tokens: int = 0
     prefill_tokens: int = 0
     sim_time_s: float = 0.0
@@ -42,6 +45,7 @@ class EnergyMeter:
     m_joules: float = 0.0
     m_prefill_joules: float = 0.0
     m_idle_joules: float = 0.0
+    m_handoff_joules: float = 0.0
     # whether the latest decode charge landed inside the window (engines
     # use this to attribute in-window tokens to slots for eviction backout)
     last_charge_in_window: bool = True
@@ -97,6 +101,34 @@ class EnergyMeter:
         self.prefill_tokens += n_tokens
         self.sim_time_s += dt
         return dt
+
+    def charge_handoff(self, n_bytes: float, *, start_s: float,
+                       duration_s: float, j_per_byte: float) -> float:
+        """Charge a prefill->decode KV migration (core.disagg): link + HBM
+        energy for `n_bytes` moved over [start_s, start_s + duration_s].
+        Non-output energy — it never touches the token counters, so it is
+        backed out of `decode_tok_per_watt` like prefill and idle.  The
+        transfer runs on the interconnect concurrently with compute, so
+        the clock does NOT advance; in-window attribution pro-rates by
+        exact interval overlap (the interval is wall time, not this
+        meter's own timeline)."""
+        e = n_bytes * j_per_byte
+        end = start_s + duration_s
+        if duration_s > 0:
+            overlap = max(0.0, min(self.measure_t1, end)
+                          - max(self.measure_t0, start_s))
+            frac = overlap / duration_s
+        else:   # instantaneous: midpoint-test the start instant
+            frac = 1.0 if self.measure_t0 <= start_s <= self.measure_t1 \
+                else 0.0
+        if frac > 0:
+            self.m_joules += e * frac
+            self.m_handoff_joules += e * frac
+            self.m_handoff_bytes += n_bytes * frac
+        self.joules += e
+        self.handoff_joules += e
+        self.handoff_bytes += n_bytes
+        return e
 
     def charge_idle(self, dt_s: float) -> None:
         e = self.profile.power_model.p_idle_w * dt_s

@@ -23,6 +23,22 @@ The engine runs in one of two modes:
                     arrays, so 16 pools x 256 slots x 10k requests finish
                     in seconds.
 
+And (orthogonally) serves one of two phases:
+
+  decode phase  — the default: continuous-batching token generation with
+                  (optionally chunked) prefill riding the decode passes.
+  prefill phase — `phase="prefill"` (core.disagg / Splitwise): a dedicated
+                  compute-bound chunk processor.  No decode iterations
+                  ever run; each step drains up to `prefill_chunk` prompt
+                  tokens across the occupied slots (oldest request first —
+                  FIFO over slot refills keeps the TTFT tail honest) at
+                  the engine's `prefill_mfu`, and a slot whose prompt
+                  drains emits the request's first token and moves it to
+                  the `handoff` outbox for the paired decode pool (the
+                  fleet simulator applies the KV-migration delay and
+                  energy).  Analytical mode only — a model-mode prefill
+                  phase would need real KV transport.
+
 All post-decode bookkeeping (token emission, position advance, completion,
 window-ceiling handling) is slot-batched over numpy arrays — there is no
 per-slot Python loop on the hot path; Python-level loops only touch the
@@ -43,6 +59,7 @@ from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
+from repro.core.fleet import PREFILL_MFU
 from repro.core.profiles import BaseProfile
 
 from .energy import EnergyMeter
@@ -59,14 +76,29 @@ class PoolEngine:
                  evict_on_overflow: bool = False,
                  respect_arrival: bool = False,
                  streamed_params: Optional[float] = None,
-                 vocab: int = 32000):
+                 vocab: int = 32000, phase: str = "decode",
+                 prefill_mfu: Optional[float] = None):
         self.cfg, self.params = cfg, params
         self.window = window
         self.name = name
         self.profile = profile
         self.n_slots = n_slots if n_slots is not None \
             else max(profile.n_max(window), 1)
+        if phase not in ("decode", "prefill"):
+            raise ValueError(f"unknown engine phase {phase!r}")
+        if phase == "prefill" and cfg is not None:
+            raise ValueError("prefill-phase engines are analytical-only")
+        self.phase = phase
+        if not prefill_chunk and phase == "prefill":
+            # prefill phase always works chunkwise: None *and* the decode
+            # engines' "unchunked" 0 fall back to the default chunk (a 0
+            # budget would spin _step_prefill without ever draining)
+            prefill_chunk = 512
         self.prefill_chunk = prefill_chunk
+        # MFU every prefill charge is drawn at: the calibrated interleave
+        # MFU by default; disagg prefill pools pass their dedicated-prefill
+        # MFU (core.disagg.Disaggregated.prefill_mfu)
+        self.prefill_mfu = PREFILL_MFU if prefill_mfu is None else prefill_mfu
         self.evict_on_overflow = evict_on_overflow
         self.respect_arrival = respect_arrival
         self.vocab = vocab
@@ -85,6 +117,8 @@ class PoolEngine:
         self.slot_seconds = 0.0                     # occupancy integral
         self.completed: List[Request] = []
         self.overflowed: List[Request] = []         # evicted at the window
+        self.handoff: List[Request] = []            # prefill-phase outbox
+        self.relayed: List[Request] = []            # all handed-off (stats)
         if cfg is not None:
             self._streamed_params = cfg.analytical_spec().streamed_params
             self._init_model(cfg, params)
@@ -140,6 +174,22 @@ class PoolEngine:
             self.queue.popleft()
             slot = int(np.flatnonzero(~self._active)[0])
             plen = req.prompt_len
+            if req.prefill_done:
+                # disagg decode pool: the prompt was drained by a dedicated
+                # prefill pool and its KV arrived over the interconnect —
+                # no prefill work, charge or first-token emission here
+                assert self.cfg is None, \
+                    "prefilled admission is analytical-mode only"
+                self.slots[slot] = req
+                self._active[slot] = True
+                self.pos[slot] = plen
+                self.max_new[slot] = req.max_new_tokens
+                self.prefill_left[slot] = 0
+                self.gen_count[slot] = 1
+                self.tokens[slot] = int(req.generated[0]) if req.generated \
+                    else int((np.int64(req.rid) * _LCG_A + self._seed
+                              + _LCG_C) % self.vocab)
+                continue
             if self._prefill is not None:
                 import jax.numpy as jnp
                 prompt = jnp.asarray(req.prompt[None, :])
@@ -168,7 +218,8 @@ class PoolEngine:
                 req.generated = []
             else:
                 self.meter.charge_prefill(
-                    plen, streamed_params=self._streamed_params)
+                    plen, mfu=self.prefill_mfu,
+                    streamed_params=self._streamed_params)
                 self.prefill_left[slot] = 0
                 self.gen_count[slot] = 1
                 self.tokens[slot] = first_tok
@@ -234,7 +285,8 @@ class PoolEngine:
         self.meter.tokens -= max(int(self.gen_count[slot]) - 1, 0)
         self.meter.m_tokens -= int(self.m_gen[slot])
         req.generated = None
-        req.preemptions += 1
+        req.prefill_done = False    # its KV is dropped: the destination
+        req.preemptions += 1        # (re-)prefills from scratch
         req.ready_time = self.meter.sim_time_s
         self.overflowed.append(req)
         self._clear_slot(slot)
@@ -265,7 +317,8 @@ class PoolEngine:
                 break
             take = int(min(budget, self.prefill_left[i]))
             self.meter.charge_prefill(
-                take, streamed_params=self._streamed_params,
+                take, mfu=self.prefill_mfu,
+                streamed_params=self._streamed_params,
                 overlap_s=overlap_s)
             overlap_s = 0.0         # only one chunk rides each decode pass
             self.prefill_left[i] -= take
@@ -278,7 +331,52 @@ class PoolEngine:
                 req.n_generated = 1
                 req.first_token_time = self.meter.sim_time_s
 
+    def _finish_prefill(self, slot: int) -> None:
+        """Prefill-phase completion: the prompt drained, the last forward
+        emitted the first token; the request leaves for the paired decode
+        pool via the `handoff` outbox (FleetSim adds the KV-migration
+        delay on top of `ready_time` and charges the transfer energy)."""
+        req = self.slots[slot]
+        req.n_generated = 1
+        req.generated = [int(self.tokens[slot])]
+        req.first_token_time = self.meter.sim_time_s
+        req.prefill_done = True
+        req.ready_time = self.meter.sim_time_s
+        self.handoff.append(req)
+        self.relayed.append(req)
+        self._clear_slot(slot)
+
+    def _step_prefill(self) -> int:
+        """One prefill-phase iteration: drain up to `prefill_chunk` prompt
+        tokens across the occupied slots, oldest request first (slot
+        indices recycle, so raw index order would let a fresh giant prompt
+        starve an almost-drained older one)."""
+        t_start = self.meter.sim_time_s
+        self._admit()
+        n_occupied = int(self._active.sum())
+        pending = sorted(
+            np.flatnonzero(self._active & (self.prefill_left > 0)),
+            key=lambda i: self._ready(self.slots[int(i)]))
+        budget = self.prefill_chunk
+        n_work = 0
+        for i in pending:
+            if budget <= 0:
+                break
+            take = int(min(budget, self.prefill_left[i]))
+            self.meter.charge_prefill(
+                take, mfu=self.prefill_mfu,
+                streamed_params=self._streamed_params)
+            self.prefill_left[i] -= take
+            budget -= take
+            n_work += take
+            if self.prefill_left[i] == 0:
+                self._finish_prefill(int(i))
+        self.slot_seconds += n_occupied * (self.meter.sim_time_s - t_start)
+        return n_work
+
     def step(self) -> int:
+        if self.phase == "prefill":
+            return self._step_prefill()
         t_start = self.meter.sim_time_s
         self._admit()
         # occupancy counts every held slot — including those still waiting
@@ -352,6 +450,7 @@ class PoolEngine:
         return dict(name=self.name, window=self.window,
                     n_slots=self.n_slots,
                     completed=len(self.completed),
+                    relayed=len(self.relayed),
                     preempted=self.preempted,
                     tokens=self.meter.tokens,
                     joules=round(self.meter.joules, 1),

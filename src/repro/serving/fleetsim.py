@@ -17,14 +17,20 @@ Execution model (event-driven, per-engine timelines):
     is routed up front; each engine then advances its own clock through its
     private event sequence (idle-skip to next arrival, decode iterations of
     tau(n, L), chunked prefill charges).  Engines never need a shared clock
-    — except for overflow migrations, which only flow toward larger
-    windows (pool i -> pool i+1 in the admission ladder; FleetOpt's
-    short -> long is the K = 2 case).  That dependency is a DAG, so pools
-    run in ascending-window topological order: each pool drains, its
-    evicted requests are injected into the next pool's (time-sorted) queue
-    carrying their eviction timestamps, then the next pool drains.  A
-    K-pool request can migrate several hops (short -> mid -> long);
-    `migrations` counts hops, not unique requests.
+    — except for cross-pool request flow, which is always *forward* in the
+    pool order: overflow migrations flow toward larger windows (pool i ->
+    pool i+1 in the admission ladder; FleetOpt's short -> long is the K = 2
+    case), and the disaggregated kinds add the prefill -> decode KV-handoff
+    hop within each window slice (plus decode-short -> prefill-long
+    re-prefill on overflow).  Both dependencies form a DAG, so pools run in
+    topological order — ascending window, prefill before its paired decode
+    — each pool drains, and its evicted / handed-off requests are injected
+    into the destination pool's (time-sorted) queue carrying their eviction
+    or handoff-completion timestamps (a handoff's `ready_time` includes the
+    KV-migration delay over the interconnect, whose link + HBM energy is
+    charged to the prefill engine's meter as non-output energy).  A K-pool
+    request can migrate several hops (short -> mid -> long); `migrations`
+    counts overflow hops, `handoffs` counts KV migrations.
   * Within a pool, requests are balanced over the N engine replicas by
     least *total assigned* predicted work (prompt + predicted output
     tokens).  All routing happens before any engine runs, so "outstanding"
@@ -47,6 +53,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.disagg import (HANDOFF_J_PER_BYTE, INTERCONNECT_BPS,
+                               Disaggregated)
 from repro.core.fleet import FleetReport, PoolOverride, apply_overrides
 from repro.core.modelspec import ModelSpec
 from repro.core.multipool import MultiPool
@@ -79,14 +87,18 @@ def trace_requests(workload: Workload, n: int, *, seed: int = 0,
 
 
 def topology_roles(kind: str, plan: FleetReport) -> List[str]:
-    """Router role name per plan pool, ascending-window order."""
+    """Router role name per plan pool, ascending-window order.  Ties
+    (a disagg slice's prefill and decode pools share a window) keep the
+    plan's prefill-before-decode provisioning order — Python's sort is
+    stable, and `core.fleet.apply_overrides` sorts the same way, so role
+    alignment holds everywhere."""
     pools = sorted(plan.pools, key=lambda p: p.window)
     if kind == "homo":
         return ["homo"]
     if kind in ("two_pool", "fleetopt"):
         assert len(pools) == 2, [p.name for p in pools]
         return ["short", "long"]
-    if kind == "multipool":
+    if kind in ("multipool", "disagg", "disagg_fleetopt"):
         return [p.name for p in pools]
     raise ValueError(kind)
 
@@ -137,6 +149,22 @@ def build_topology(kind: str, workload: Workload, profile: BaseProfile,
         ladder = [(p.name, p.window / gamma) for p in pools[:-1]]
         ladder.append((pools[-1].name, math.inf))
         policy = RouterPolicy(kind="multipool", gamma=gamma, ladder=ladder)
+    elif kind in ("disagg", "disagg_fleetopt"):
+        # Same analytical-twin convention as fleetopt: the serving router
+        # admits short iff predicted total <= gamma * b_short and the short
+        # slice serves that same window, so the twin is
+        # Disaggregated(gamma * b_short, gamma=1).  Admission routes to the
+        # *prefill* roles; decode pools are fed only by the handoff hop.
+        dis = Disaggregated(b_short=int(gamma * b_short), gamma=1.0,
+                            long_window=long_window,
+                            split=(kind == "disagg_fleetopt"))
+        rep = dis.provision(workload, profile, model)
+        prefill = [p for p in sorted(rep.pools, key=lambda p: p.window)
+                   if p.phase == "prefill"]
+        ladder = [(p.name, float(p.window)) for p in prefill[:-1]]
+        ladder.append((prefill[-1].name, math.inf))
+        policy = RouterPolicy(kind=kind, b_short=b_short, gamma=gamma,
+                              ladder=ladder)
     else:
         raise ValueError(kind)
     if pool_overrides:
@@ -148,32 +176,43 @@ def build_topology(kind: str, workload: Workload, profile: BaseProfile,
 
 class PoolGroup:
     """N engine replicas serving one provisioned pool, balanced by least
-    *total assigned* predicted work (prompt + predicted output).  Every
-    request is routed before any engine runs (see the execution model
-    above), so there is no notion of work "draining" between assignments —
-    `_pending` is deliberately a monotone cumulative-assignment counter,
-    which load-balances the whole trace across replicas.  Quacks like a
-    PoolEngine for the router (submit / stats)."""
+    *total assigned* predicted work (prompt + predicted output for decode
+    pools; prompt only for prefill-phase pools, whose work ends at the
+    handoff).  Every request is routed before any engine runs (see the
+    execution model above), so there is no notion of work "draining"
+    between assignments — `_pending` is deliberately a monotone
+    cumulative-assignment counter, which load-balances the whole trace
+    across replicas.  Quacks like a PoolEngine for the router
+    (submit / stats)."""
 
     def __init__(self, role: str, engines: List[PoolEngine]):
         self.role = role
         self.engines = engines
+        self.phase = engines[0].phase
         self._pending = np.zeros(len(engines), np.float64)
 
     def submit(self, req: Request) -> None:
         i = int(np.argmin(self._pending))
-        self._pending[i] += req.predicted_total
+        self._pending[i] += req.prompt_len if self.phase == "prefill" \
+            else req.predicted_total
         self.engines[i].submit(req)
 
     @property
     def completed(self) -> List[Request]:
         return [r for e in self.engines for r in e.completed]
 
+    @property
+    def relayed(self) -> List[Request]:
+        """Requests whose prefill this (prefill-phase) pool drained."""
+        return [r for e in self.engines for r in e.relayed]
+
     def latency_percentiles(self) -> Dict[str, float]:
         """TTFT/TPOT/e2e percentiles of the requests that *finished* in
         this pool (a migrated request's TTFT counts where its prefill
-        finally drained)."""
-        return _percentiles(self.completed)
+        finally drained).  A prefill-phase pool finishes nothing — its
+        percentiles cover the requests it relayed (their TTFT is this
+        pool's doing; the downstream metrics are informational)."""
+        return _percentiles(self.completed or self.relayed)
 
     def measured_totals(self) -> Dict[str, float]:
         return dict(tokens=sum(e.meter.m_tokens for e in self.engines),
@@ -186,15 +225,19 @@ class PoolGroup:
         slot_s = sum(e.slot_seconds for e in self.engines)
         avail = sum(e.n_slots * t for e, t in zip(self.engines, times))
         return dict(role=self.role,
+                    phase=self.phase,
                     window=self.engines[0].window,
                     instances=len(self.engines),
                     n_slots=self.engines[0].n_slots,
                     completed=sum(len(e.completed) for e in self.engines),
+                    relayed=sum(len(e.relayed) for e in self.engines),
                     preempted=sum(e.preempted for e in self.engines),
                     tokens=tok, joules=round(joules, 1),
                     m_tokens=sum(e.meter.m_tokens for e in self.engines),
                     m_joules=round(sum(e.meter.m_joules
                                        for e in self.engines), 1),
+                    m_prefill_joules=round(sum(e.meter.m_prefill_joules
+                                               for e in self.engines), 1),
                     tok_per_watt=round(tok / joules, 3) if joules else 0.0,
                     occupancy=round(slot_s / avail, 3) if avail else 0.0,
                     sim_time_s=round(max(times), 3) if times else 0.0)
@@ -205,33 +248,73 @@ class FleetSim:
 
     def __init__(self, policy: RouterPolicy, plan: FleetReport, *,
                  model: ModelSpec, prefill_chunk: int = 512,
-                 rng_seed: int = 0):
+                 rng_seed: int = 0,
+                 kv_interconnect_Bps: float = INTERCONNECT_BPS,
+                 kv_handoff_j_per_byte: float = HANDOFF_J_PER_BYTE):
         self.policy = policy
         self.plan = plan
+        self.model = model
+        self.kv_interconnect_Bps = kv_interconnect_Bps
+        self.kv_handoff_j_per_byte = kv_handoff_j_per_byte
         pools = sorted(plan.pools, key=lambda p: p.window)
         role_names = topology_roles(policy.kind, plan)
         roles = list(zip(role_names, pools))
-        self.order = role_names              # ascending-window DAG order
+        # topological DAG order: ascending window, and within a disagg
+        # slice prefill before its paired decode (the provisioning order —
+        # the window sort is stable)
+        self.order = role_names
         self.groups: Dict[str, PoolGroup] = {}
+        decode_roles = [(r, p) for r, p in roles if p.phase != "prefill"]
+        terminal_decode = decode_roles[-1][0] if decode_roles else None
         for idx, (role, p) in enumerate(roles):
             # Overflow headroom ends at the pool window: a request routed
             # here that outgrows it migrates one hop up the ladder
             # (preemption + re-prefill in the next pool).  FleetOpt's short
-            # pool and every non-terminal multipool rung evict; terminal
-            # pools truncate at their window, like the token-level engine.
+            # pool, every non-terminal multipool rung and every
+            # non-terminal disagg decode pool evict; terminal pools
+            # truncate at their window, like the token-level engine.
             evict = (policy.kind == "fleetopt" and role == "short") \
-                or (policy.kind == "multipool" and idx < len(roles) - 1)
+                or (policy.kind == "multipool" and idx < len(roles) - 1) \
+                or (policy.kind == "disagg_fleetopt"
+                    and p.phase != "prefill" and role != terminal_decode)
             engines = [
                 PoolEngine(None, None, window=p.window, profile=p.profile,
                            name=f"{p.name}#{j}",
                            prefill_chunk=prefill_chunk,
+                           phase=p.phase,
+                           prefill_mfu=p.prefill_engine_mfu,
                            evict_on_overflow=evict, respect_arrival=True,
                            streamed_params=model.streamed_params,
                            rng_seed=rng_seed + 7919 * j)
                 for j in range(max(p.instances, 1))]
             self.groups[role] = PoolGroup(role, engines)
+        # cross-pool edges, all pointing forward in `order`:
+        #   handoff_to  — prefill role -> its slice's decode role
+        #   overflow_to — evicting role -> where its evictions re-enter
+        #                 (ladder kinds: next rung; disagg: next slice's
+        #                 *prefill* pool, where the request re-prefills)
+        self.handoff_to: Dict[str, str] = {}
+        self.overflow_to: Dict[str, str] = {}
+        if policy.kind in ("disagg", "disagg_fleetopt"):
+            dec_by_window = {p.window: r for r, p in decode_roles}
+            pf_roles = [(r, p) for r, p in roles if p.phase == "prefill"]
+            for r, p in pf_roles:
+                self.handoff_to[r] = dec_by_window[p.window]
+            for (r1, p1), (_, p2) in zip(decode_roles, decode_roles[1:]):
+                pf_next = next(r for r, p in pf_roles
+                               if p.window == p2.window)
+                self.overflow_to[r1] = pf_next
+            # per-role whole-instance KV bytes per prompt token
+            self._kv_bytes_per_tok = {
+                r: self.model.kv_bytes_per_token(tp=p.profile.tp)
+                * p.profile.tp for r, p in pf_roles}
+        else:
+            for a, b in zip(self.order, self.order[1:]):
+                self.overflow_to[a] = b
+            self._kv_bytes_per_tok = {}
         self.router = ContextRouter(self.groups, policy)
         self.migrations = 0
+        self.handoffs = 0
         self._window: Tuple[float, float] = (0.0, float("inf"))
 
     def run(self, requests: List[Request], *, warmup_frac: float = 0.35,
@@ -246,25 +329,44 @@ class FleetSim:
                 e.meter.measure_t0, e.meter.measure_t1 = self._window
         for r in reqs:
             self.router.route(r)
-        # topological order: overflow migrations only flow up the ladder
-        # (pool i -> pool i+1), so draining pools in ascending-window order
-        # sees every migration before its destination runs
-        migrated: List[Request] = []
+        # topological order: cross-pool flow (overflow migrations and KV
+        # handoffs) only points forward, so draining pools in `order` sees
+        # every injected request before its destination runs
+        inbox: Dict[str, List[Request]] = {role: [] for role in self.order}
         for role in self.order:
             grp = self.groups[role]
-            if migrated:
-                self.migrations += len(migrated)
-                for r in sorted(migrated, key=lambda r: r.ready_time):
+            if inbox[role]:
+                for r in sorted(inbox[role], key=lambda r: r.ready_time):
                     grp.submit(r)
                 for e in grp.engines:   # keep queues time-sorted for the
                     e.queue = deque(    # head-gated admission
                         sorted(e.queue, key=e._ready))
-                migrated = []
+                inbox[role] = []
             for e in grp.engines:
                 e.run_until_drained(max_iters=max_iters)
-                migrated.extend(e.overflowed)
-                e.overflowed = []
-        assert not migrated, "the terminal pool may not overflow-evict"
+                if e.overflowed:
+                    dest = self.overflow_to.get(role)
+                    assert dest is not None, \
+                        "the terminal pool may not overflow-evict"
+                    self.migrations += len(e.overflowed)
+                    inbox[dest].extend(e.overflowed)
+                    e.overflowed = []
+                if e.handoff:
+                    dest = self.handoff_to[role]
+                    kappa = self._kv_bytes_per_tok[role]
+                    for r in e.handoff:
+                        n_bytes = kappa * r.prompt_len
+                        delay = n_bytes / self.kv_interconnect_Bps
+                        e.meter.charge_handoff(
+                            n_bytes, start_s=r.ready_time,
+                            duration_s=delay,
+                            j_per_byte=self.kv_handoff_j_per_byte)
+                        r.ready_time += delay
+                        r.prefill_role = role
+                    self.handoffs += len(e.handoff)
+                    inbox[dest].extend(e.handoff)
+                    e.handoff = []
+        assert not any(inbox.values()), "undelivered cross-pool requests"
         return self.report()
 
     def latency_by_role(self) -> Dict[str, Dict[str, float]]:
@@ -276,7 +378,7 @@ class FleetSim:
     def report(self) -> Dict[str, dict]:
         out: Dict[str, dict] = {}
         completed: List[Request] = []
-        tok = joules = prefill_j = idle_j = 0.0
+        tok = joules = prefill_j = idle_j = handoff_j = handoff_b = 0.0
         for role, grp in self.groups.items():
             out[role] = grp.stats()
             completed += grp.completed
@@ -284,6 +386,8 @@ class FleetSim:
             joules += sum(e.meter.m_joules for e in grp.engines)
             prefill_j += sum(e.meter.m_prefill_joules for e in grp.engines)
             idle_j += sum(e.meter.m_idle_joules for e in grp.engines)
+            handoff_j += sum(e.meter.m_handoff_joules for e in grp.engines)
+            handoff_b += sum(e.meter.m_handoff_bytes for e in grp.engines)
         # engines that sat idle past the window end never saw those idle
         # watts: charge the gap so the fleet denominator is wall-clock honest
         t0, t1 = self._window
@@ -295,10 +399,13 @@ class FleetSim:
                     joules += extra
                     idle_j += extra
         span = max(t1 - t0, 1e-9)
-        decode_j = joules - prefill_j - idle_j
+        # decode-only backs out every non-output charge: prefill compute,
+        # idle draw and the KV-handoff interconnect energy (core.disagg)
+        decode_j = joules - prefill_j - idle_j - handoff_j
         out["fleet"] = dict(
             completed=len(completed),
             migrations=self.migrations,
+            handoffs=self.handoffs,
             measure_window_s=(round(t0, 3), round(t1, 3)),
             tokens=int(tok), joules=round(joules, 1),
             tokens_per_s=round(tok / span, 1),
@@ -307,13 +414,32 @@ class FleetSim:
             prefill_energy_frac=round(prefill_j / joules, 3) if joules
             else 0.0,
             idle_energy_frac=round(idle_j / joules, 3) if joules else 0.0,
+            kv_handoff_joules=round(handoff_j, 3),
+            kv_handoff_gb=round(handoff_b / 1e9, 3),
+            kv_handoff_energy_frac=round(handoff_j / joules, 6) if joules
+            else 0.0,
             **_percentiles(completed))
         return out
 
 
+def analytical_decode_tok_per_watt(plan: FleetReport) -> float:
+    """Eq. 4 over the decode pools only — the closed-form twin of the
+    simulator's `decode_tok_per_watt`.  Identical to `plan.tok_per_watt`
+    for plans without prefill-phase pools."""
+    dec = [p for p in plan.pools if p.phase != "prefill"]
+    pw = sum(p.instances * p.power_w_per_instance for p in dec)
+    return sum(p.tokens_per_s for p in dec) / pw if pw else 0.0
+
+
 @dataclasses.dataclass
 class SimVsAnalytical:
-    """One head-to-head cell: measured fleet vs closed-form sizing."""
+    """One head-to-head cell: measured fleet vs closed-form sizing.
+
+    `analytical_tok_per_watt` is the like-for-like twin of
+    `sim_decode_tok_per_watt`: for the disagg kinds that is the *decode
+    fleet only* (the analytical whole-fleet number, which also pays the
+    dedicated prefill pools, is kept in `analytical_fleet_tok_per_watt`);
+    for every other kind the two analytical numbers coincide."""
 
     workload: str
     topology: str
@@ -321,6 +447,7 @@ class SimVsAnalytical:
     sim_tok_per_watt: float          # all-in (prefill + idle metered)
     sim_decode_tok_per_watt: float   # like-for-like with Eq. 4
     report: Dict[str, dict]
+    analytical_fleet_tok_per_watt: float = 0.0
 
     @property
     def delta_pct(self) -> float:
@@ -364,7 +491,8 @@ def simulate_topology(kind: str, workload: Workload, profile: BaseProfile,
     report = sim.run(reqs)
     return SimVsAnalytical(
         workload=workload.name, topology=kind,
-        analytical_tok_per_watt=plan.tok_per_watt,
+        analytical_tok_per_watt=analytical_decode_tok_per_watt(plan),
+        analytical_fleet_tok_per_watt=plan.tok_per_watt,
         sim_tok_per_watt=report["fleet"]["tok_per_watt"],
         sim_decode_tok_per_watt=report["fleet"]["decode_tok_per_watt"],
         report=report)

@@ -29,6 +29,12 @@ class Request:
     # router-visible output-length prediction (e.g. E[output] from the
     # workload trace).  None = oracle routing on the actual length.
     predicted_output: Optional[int] = None
+    # disaggregated serving: set when a dedicated prefill pool already
+    # drained the prompt (the KV arrives over the interconnect), so the
+    # decode pool must not re-charge or re-run prefill.  `prefill_role`
+    # names the router role that drained it (SLO-loop TTFT attribution).
+    prefill_done: bool = False
+    prefill_role: str = ""
 
     @property
     def prompt_len(self) -> int:

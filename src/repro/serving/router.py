@@ -14,6 +14,11 @@ whose boundary covers its routing metric.  The three §4 topologies and the
   multipool — explicit K-entry ladder (core.multipool): K geometric
               windows, admission at window/gamma, per-hop overflow
               migration pool i -> pool i+1 (serving.fleetsim).
+  disagg / disagg_fleetopt — prefill/decode disaggregation (core.disagg):
+              an explicit ladder over the *prefill* roles only — every
+              request enters through a prefill pool; the paired decode
+              pools are fed exclusively by the KV-handoff hop inside
+              serving.fleetsim, never by admission.
 
 The router is what determines which segment of the logistic P(b) curve each
 engine occupies — the mechanism behind the fleet-level 2.5x (paper §4.2).
@@ -30,12 +35,13 @@ from .request import Request
 
 @dataclasses.dataclass
 class RouterPolicy:
-    kind: str                  # homo | two_pool | fleetopt | multipool
+    kind: str    # homo | two_pool | fleetopt | multipool | disagg[_fleetopt]
     b_short: int = 4096
     gamma: float = 2.0
     p99_output: int = 1024     # conservative two_pool admission margin
-    # K-pool: explicit ordered (role, admission boundary) ladder.  Required
-    # for kind="multipool"; ignored (derived) for the named §4 topologies.
+    # K-pool / disagg: explicit ordered (role, admission boundary) ladder.
+    # Required for kind="multipool" and the disagg kinds (where it spans
+    # the prefill roles); ignored (derived) for the named §4 topologies.
     ladder: Optional[List[Tuple[str, float]]] = None
 
     def admission_ladder(self, roles: Sequence[str]
@@ -48,9 +54,10 @@ class RouterPolicy:
             return [("short", float(self.b_short)), ("long", math.inf)]
         if self.kind == "fleetopt":
             return [("short", self.gamma * self.b_short), ("long", math.inf)]
-        if self.kind == "multipool":
+        if self.kind in ("multipool", "disagg", "disagg_fleetopt"):
             if not self.ladder:
-                raise ValueError("multipool policy needs an explicit ladder")
+                raise ValueError(f"{self.kind} policy needs an explicit"
+                                 " ladder")
             return list(self.ladder)
         raise ValueError(self.kind)
 

@@ -41,10 +41,29 @@ def test_disagg_energy_economics():
 
 
 def test_disagg_kv_handoff_is_ici_feasible():
-    bps = Disaggregated.kv_handoff_bytes_per_s(AZURE, LLAMA31_70B)
-    # ~1000 req/s * ~1.4K tokens * 328KB/token ~ 0.5 TB/s across the fleet;
+    # TP degree comes from the profile (the old helper hardcoded tp=8)
+    bps = Disaggregated.kv_handoff_bytes_per_s(AZURE, LLAMA31_70B,
+                                               H100_LLAMA70B)
+    # ~1000 req/s * ~1.6K tokens * 328KB/token ~ 0.5 TB/s across the fleet;
     # tens of instances * 450 GB/s links: feasible, but not free
     assert 1e11 < bps < 2e12
+    # whole-instance KV is TP-invariant while TP <= n_kv (sharded GQA
+    # stores ceil(n_kv/TP) heads per GPU); TP > n_kv replicates heads
+    # across ranks and the migration really moves the extra copies
+    prof_tp1 = computed_profile(LLAMA31_8B, H100, H100_POWER, tp=1)
+    prof_tp16 = computed_profile(LLAMA31_8B, H100, H100_POWER, tp=16)
+    per_req8 = Disaggregated.kv_handoff_bytes_per_request(
+        1000, LLAMA31_70B, H100_LLAMA70B)
+    per_req1 = Disaggregated.kv_handoff_bytes_per_request(
+        1000, LLAMA31_70B, prof_tp1)
+    per_req16 = Disaggregated.kv_handoff_bytes_per_request(
+        1000, LLAMA31_70B, prof_tp16)
+    assert per_req8 == pytest.approx(per_req1)
+    assert per_req16 == pytest.approx(2 * per_req8)
+    # the per-request migration latency is ms-scale on NVLink-class links
+    delay = Disaggregated().kv_handoff_delay_s(1000, LLAMA31_70B,
+                                               H100_LLAMA70B)
+    assert 1e-4 < delay < 1e-2
 
 
 def test_speculative_decoding_tradeoff():

@@ -1,10 +1,15 @@
-"""Golden-value regression tests for the paper's Table 1 anchors and the
-1/W halving property, via core.law + core.profiles only (no optional
-deps — unlike tests/core/test_law.py these never skip)."""
+"""Golden-value regression tests for the paper's Table 1 anchors, the
+1/W halving property, and the §10.3 disaggregated analytical provisioning,
+via core only (no optional deps — unlike tests/core/test_law.py these
+never skip)."""
 import pytest
 
+from repro.core.disagg import Disaggregated
+from repro.core.fleet import PREFILL_SATURATION
 from repro.core.law import fit_one_over_w
+from repro.core.modelspec import LLAMA31_70B
 from repro.core.profiles import H100_LLAMA70B
+from repro.core.workloads import AZURE
 
 
 def test_table1_anchor_64k():
@@ -33,3 +38,31 @@ def test_one_over_w_halving_per_context_doubling():
     assert fit.r2 > 0.99
     for ratio in fit.halving_ratios:
         assert 0.42 < ratio < 0.65, fit.halving_ratios
+
+
+def test_disagg_azure_h100_provisioning_anchor():
+    """Golden pin for core.disagg analytical provisioning on Azure/H100
+    (b_short=4096, gamma=2): per-pool instances, per-instance power and
+    the fleet tok/W numbers the serving simulator is measured against."""
+    rep = Disaggregated(b_short=4096, gamma=2.0).provision(
+        AZURE, H100_LLAMA70B, LLAMA31_70B)
+    pools = {p.name: p for p in rep.pools}
+    assert {n: p.instances for n, p in pools.items()} == {
+        "prefill-8K": 12, "decode-8K": 19,
+        "prefill-64K": 26, "decode-64K": 21}
+    # prefill pools draw near-saturated P_nom regardless of window
+    nom = H100_LLAMA70B.power_model.p_nom_w * PREFILL_SATURATION
+    assert pools["prefill-8K"].power_w_per_instance == pytest.approx(nom)
+    assert pools["prefill-64K"].power_w_per_instance == pytest.approx(nom)
+    assert pools["decode-8K"].power_w_per_instance == \
+        pytest.approx(578.58, rel=1e-3)
+    assert pools["decode-64K"].power_w_per_instance == \
+        pytest.approx(417.92, rel=1e-3)
+    # whole-fleet (prefill watts included) vs decode-fleet-only tok/W
+    assert rep.instances == 78 and rep.gpus == 624
+    assert rep.power_kw == pytest.approx(41.885, rel=1e-3)
+    assert rep.tok_per_watt == pytest.approx(7.712, rel=1e-3)
+    dec = [p for p in rep.pools if p.phase == "decode"]
+    dec_tpw = (sum(p.tokens_per_s for p in dec)
+               / sum(p.instances * p.power_w_per_instance for p in dec))
+    assert dec_tpw == pytest.approx(16.339, rel=1e-3)

@@ -77,3 +77,36 @@ def test_slo_already_compliant_fleet_untouched():
     assert r.instances_added == 0
     assert r.compliance_cost_pct == 0.0
     assert not r.overrides
+
+
+def test_slo_disagg_grows_prefill_fleet_for_ttft():
+    """Disaggregated serving: TTFT violations are attributed to the
+    prefill pools (they drain the prompt), so the loop re-provisions the
+    prefill fleet and leaves the decode fleet alone."""
+    r = size_to_slo("disagg_fleetopt", AZURE, H100_LLAMA70B, LLAMA31_70B,
+                    b_short=4096, n_requests=1500, seed=0)
+    assert r.compliant
+    assert r.ttft_p99_s <= 0.5
+    first, last = r.rounds[0].instances, r.rounds[-1].instances
+    assert len(r.rounds) >= 2          # round 0 violates, the loop worked
+    grown = {role for role in first if last[role] > first[role]}
+    assert grown and all(role.startswith("prefill") for role in grown), \
+        (first, last)
+    for role in first:                 # decode fleets never grew
+        if role.startswith("decode"):
+            assert last[role] == first[role]
+
+
+def test_slo_tpot_violations_grow_decode_fleet():
+    """With a TPOT p99 constraint in the SLOSpec, violations attribute to
+    the decode pools (prefill capacity cannot buy TPOT).  6 ms sits below
+    the physical tau floor, so the run is not expected to comply — the
+    pin is the *attribution*: decode grows, prefill does not."""
+    r = size_to_slo("disagg", AZURE, H100_LLAMA70B, LLAMA31_70B,
+                    n_requests=1500, seed=0, max_rounds=2,
+                    slo=SLOSpec(ttft_p99_s=0.5, tpot_p99_ms=6.0))
+    r0, r1 = r.rounds[0].instances, r.rounds[1].instances
+    assert r.rounds[0].violators["decode-64K"] > 0
+    assert r1["decode-64K"] > r0["decode-64K"]
+    assert r1["prefill-64K"] == r0["prefill-64K"]
+    assert r.rounds[0].tpot_p99_ms > 6.0
