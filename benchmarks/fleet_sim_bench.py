@@ -29,6 +29,17 @@ size_to_slo; if disagg+fleetopt's measured all-in tok/W falls short of
 plain fleetopt's, the bench prints the shortfall and the KV-handoff cost
 that (partially) explains it instead of failing.
 
+Table D (model heterogeneity, §5.1/§3.2 — DESIGN.md §9) is the headline
+the paper can't give: how much of the semantic-routing and MoE
+active-parameter gains survives real queueing, misroutes and the TTFT
+SLO.  On H100 it serves homo-70B vs fleetopt-70B vs semantic 8B/70B
+(zero misroute, plus the FleetOpt-headroom variant at a 5% classifier
+error with its escalation traffic) vs Qwen3-235B-A22B as a `moe_pool` at
+dispatch_ms in {0, 2, 10} and as the large model of `moe_semantic` —
+analytical vs measured vs SLO-constrained (with the post-compliance trim
+phase).  Azure in --quick; Azure + Agent in the full run.  Gate: every
+Table D cell is SLO-compliant after size_to_slo.
+
 `--json PATH` dumps {"meta", "rows"} for CI's perf-regression diff
 (benchmarks/perf_diff.py --fleet against the committed
 benchmarks/results/fleet_sim.json, which is regenerated with
@@ -41,7 +52,10 @@ Harness:     PYTHONPATH=src python -m benchmarks.run --only fleet_sim
 import sys
 
 from repro.core import ladder_windows, size_to_slo
-from repro.core.modelspec import LLAMA31_70B
+from repro.core.hardware import H100
+from repro.core.modelspec import LLAMA31_70B, QWEN3_235B_A22B
+from repro.core.moe import moe_profile
+from repro.core.power import H100_POWER
 from repro.core.profiles import (B200_LLAMA70B_FLEET, H100_LLAMA70B,
                                  H200_LLAMA70B)
 from repro.core.workloads import AGENT, AZURE, LMSYS
@@ -55,6 +69,12 @@ GENERATIONS = (("H100", H100_LLAMA70B), ("H200", H200_LLAMA70B),
 SLO_TOPOLOGIES = ("homo", "fleetopt", "multipool")
 DISAGG_TOPOLOGIES = ("disagg", "disagg_fleetopt")
 K_POOLS = 3
+# Table D: MoE expert-dispatch sweep and the semantic classifier error
+# whose misrouted-giant-prompt tail still fits the 1% p99 TTFT budget
+# (at 0.1 on Azure the misroutes alone are ~1.1% of traffic and the SLO
+# is service-time unattainable — DESIGN.md §9)
+MOE_DISPATCH_MS = (0.0, 2.0, 10.0)
+D_MISROUTE = 0.05
 
 
 def disagg_vs_fleetopt(rows):
@@ -68,6 +88,54 @@ def disagg_vs_fleetopt(rows):
     return dis, az_a
 
 
+def _table_d_cells(wl):
+    """(kind, profile, model, kwargs) per Table D cell for one workload."""
+    bs = B_SHORT[wl.name]
+    moe = moe_profile(QWEN3_235B_A22B, H100, H100_POWER, tp=8)
+    cells = [("homo", H100_LLAMA70B, LLAMA31_70B, {}),
+             ("fleetopt", H100_LLAMA70B, LLAMA31_70B, dict(b_short=bs)),
+             ("semantic", H100_LLAMA70B, LLAMA31_70B, dict(b_short=bs)),
+             ("semantic_fleetopt", H100_LLAMA70B, LLAMA31_70B,
+              dict(b_short=bs, misroute_rate=D_MISROUTE))]
+    cells += [("moe_pool", moe, QWEN3_235B_A22B, dict(dispatch_ms=d))
+              for d in MOE_DISPATCH_MS]
+    cells.append(("moe_semantic", moe, QWEN3_235B_A22B,
+                  dict(b_short=bs, misroute_rate=D_MISROUTE,
+                       dispatch_ms=2.0)))
+    return cells
+
+
+def table_d(workloads, *, n_requests: int, slo_requests: int, seed: int):
+    """Model-heterogeneous cells: measured + SLO-constrained, per workload."""
+    rows = []
+    for wl in workloads:
+        for kind, prof, mdl, kw in _table_d_cells(wl):
+            cell = simulate_topology(kind, wl, prof, mdl,
+                                     n_requests=n_requests, seed=seed, **kw)
+            res = size_to_slo(kind, wl, prof, mdl,
+                              n_requests=slo_requests, seed=seed, **kw)
+            f = cell.report["fleet"]
+            rows.append(dict(
+                table="model_hetero", workload=wl.name, topology=kind,
+                model=mdl.name,
+                dispatch_ms=float(kw.get("dispatch_ms", 0.0)),
+                misroute_rate=float(kw.get("misroute_rate", 0.0)),
+                analytical=round(cell.analytical_tok_per_watt, 2),
+                simulated=round(cell.sim_decode_tok_per_watt, 2),
+                delta_pct=round(cell.delta_pct, 1),
+                all_in=round(cell.sim_tok_per_watt, 2),
+                ttft_p99_s=f.get("ttft_p99_s", 0.0),
+                escalations=f["escalations"], migrations=f["migrations"],
+                dispatch_energy_frac=f["moe_dispatch_energy_frac"],
+                slo_feasible=round(res.slo_tok_per_watt, 2),
+                slo_measured_all_in=round(res.measured_tok_per_watt, 2),
+                slo_ttft_p99_s=round(res.ttft_p99_s, 3),
+                slo_added=res.instances_added,
+                slo_trimmed=res.instances_trimmed,
+                slo_compliant=res.compliant))
+    return rows
+
+
 def _slo_cell(kind: str, profile, *, n_requests: int, seed: int):
     kw = {}
     if kind == "multipool":
@@ -78,7 +146,8 @@ def _slo_cell(kind: str, profile, *, n_requests: int, seed: int):
                        n_requests=n_requests, seed=seed, **kw)
 
 
-def run(n_requests: int = 10_000, slo_requests: int = 3000, seed: int = 0):
+def run(n_requests: int = 10_000, slo_requests: int = 3000, seed: int = 0,
+        quick: bool = False):
     rows = []
     for wl in (AZURE, LMSYS, AGENT):
         for kind in TOPOLOGIES:
@@ -125,6 +194,10 @@ def run(n_requests: int = 10_000, slo_requests: int = 3000, seed: int = 0):
             slo_ttft_p99_s=round(res.ttft_p99_s, 3),
             slo_added=res.instances_added,
             slo_compliant=res.compliant))
+    # Table D: model heterogeneity (Azure always; Agent in the full run)
+    rows += table_d((AZURE,) if quick else (AZURE, AGENT),
+                    n_requests=n_requests, slo_requests=slo_requests,
+                    seed=seed)
     az = {r["topology"]: r["simulated"] for r in rows
           if r.get("workload") == "azure-conv"
           and r["table"] == "unconstrained"}
@@ -136,11 +209,21 @@ def run(n_requests: int = 10_000, slo_requests: int = 3000, seed: int = 0):
                 for k in SLO_TOPOLOGIES}
     dis, az_a = disagg_vs_fleetopt(rows)
     dfo, fo = dis["disagg_fleetopt"]["all_in"], az_a["fleetopt"]["all_in"]
+    dh = {(r["workload"], r["topology"], r["dispatch_ms"]): r for r in rows
+          if r["table"] == "model_hetero"}
+    d_homo = dh[("azure-conv", "homo", 0.0)]
+    moe_adv = {d: dh[("azure-conv", "moe_pool", d)]["simulated"]
+               / d_homo["simulated"] for d in MOE_DISPATCH_MS}
+    sem_adv = dh[("azure-conv", "semantic", 0.0)]["simulated"] \
+        / d_homo["simulated"]
     derived = (f"simulated fleetopt/homo on Azure = {ratio:.2f}x "
                f"(acceptance >= 2x); SLO-constrained = {slo_ratio:.2f}x; "
                f"B200/H100 gain under SLO: "
                + ", ".join(f"{k} {v:.2f}x" for k, v in gen_gain.items())
-               + f"; disagg+fleetopt/fleetopt all-in = {dfo / fo:.2f}x")
+               + f"; disagg+fleetopt/fleetopt all-in = {dfo / fo:.2f}x"
+               + f"; measured semantic/homo = {sem_adv:.2f}x"
+               + "; measured MoE/homo at dispatch "
+               + ", ".join(f"{d:g}ms {v:.2f}x" for d, v in moe_adv.items()))
     return rows, derived
 
 
@@ -159,7 +242,8 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     n = 1000 if args.quick else args.n_requests
     n_slo = 1500 if args.quick else args.slo_requests
-    rows, derived = run(n_requests=n, slo_requests=n_slo, seed=args.seed)
+    rows, derived = run(n_requests=n, slo_requests=n_slo, seed=args.seed,
+                        quick=args.quick)
     if args.json:
         with open(args.json, "w") as fh:
             json.dump({"meta": dict(n_requests=n, slo_requests=n_slo,
@@ -216,6 +300,22 @@ def main(argv=None) -> None:
               f" {r['slo_ttft_p99_s']:10.3f}"
               f" {r['kv_handoff_joules']:8.1f} {r['handoffs']:6d}"
               + ("" if r["slo_compliant"] else "  NON-COMPLIANT"))
+    print("\n=== Table D: model heterogeneity (H100, semantic + MoE) ===")
+    hdr = (f"{'workload':12s} {'topology':17s} {'model':16s} {'disp':>5s}"
+           f" {'misr':>5s} {'analytic':>8s} {'simul':>7s} {'all-in':>7s}"
+           f" {'SLO-ok':>7s} {'ttft(SLO)':>10s} {'esc':>5s} {'trim':>5s}")
+    print(hdr)
+    print("-" * len(hdr))
+    het_rows = [r for r in rows if r["table"] == "model_hetero"]
+    for r in het_rows:
+        print(f"{r['workload']:12s} {r['topology']:17s}"
+              f" {r['model'][:16]:16s} {r['dispatch_ms']:5.0f}"
+              f" {r['misroute_rate']:5.2f} {r['analytical']:8.2f}"
+              f" {r['simulated']:7.2f} {r['all_in']:7.2f}"
+              f" {r['slo_feasible']:7.2f} {r['slo_ttft_p99_s']:10.3f}"
+              f" {r['escalations']:5d} {r['slo_trimmed']:5d}"
+              + ("" if r["slo_compliant"] else "  NON-COMPLIANT"))
+
     dfo, fo = dis["disagg_fleetopt"]["all_in"], az_a["fleetopt"]["all_in"]
     if dfo >= fo:
         print(f"measured: disagg+fleetopt all-in tok/W beats interleaved "
@@ -250,6 +350,12 @@ def main(argv=None) -> None:
     if bad_dis:
         fails.append(f"disagg cells violate the TTFT SLO after"
                      f" size_to_slo: {bad_dis}")
+    bad_het = [f"{r['workload']}/{r['topology']}@d{r['dispatch_ms']:g}"
+               for r in het_rows
+               if not r["slo_compliant"] or r["slo_ttft_p99_s"] > 0.5]
+    if bad_het:
+        fails.append(f"Table D cells violate the TTFT SLO after"
+                     f" size_to_slo: {bad_het}")
     if fails:
         sys.exit("ACCEPTANCE FAIL: " + "; ".join(fails))
 

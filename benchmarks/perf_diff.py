@@ -23,9 +23,11 @@ Two modes:
 
    Accepts both the bench's {"meta", "rows"} dump and the bare row list
    `benchmarks/run.py` writes.  A cell is keyed by
-   (table, generation, workload, topology); its metric is the row's
-   primary tok/W field (`simulated` for measured tables, `slo_feasible`
-   for SLO tables).
+   (table, generation, workload, topology, dispatch_ms, misroute_rate) —
+   the last two disambiguate the model-heterogeneous Table D sweep cells
+   and are empty for every other row; its metric is the row's primary
+   tok/W field (`simulated` for measured tables, `slo_feasible` for SLO
+   tables; both when a row carries both).
 """
 import argparse
 import json
@@ -63,7 +65,8 @@ def _fleet_cells(path: str) -> dict:
         if not isinstance(r, dict) or "topology" not in r:
             continue
         key = "/".join(str(r.get(k, "")) for k in
-                       ("table", "generation", "workload", "topology"))
+                       ("table", "generation", "workload", "topology",
+                        "dispatch_ms", "misroute_rate"))
         present = [f for f in _METRIC_FIELDS[:2] if f in r]
         if not present and _METRIC_FIELDS[2] in r:
             present = [_METRIC_FIELDS[2]]

@@ -31,6 +31,7 @@ from .analyzer import FleetAnalysis, fleet_tpw_analysis
 from .hardware import B200, GB200, H100, H200, TPU_V5E, ChipSpec
 from .law import fit_one_over_w, gain_decomposition
 from .modelspec import ModelSpec
+from .moe import dispatch_sensitivity, moe_profile, with_dispatch_floor
 from .power import PowerModel
 from .profiles import (B200_LLAMA70B, B200_LLAMA70B_FLEET, GB200_LLAMA70B,
                        H100_LLAMA70B, H200_LLAMA70B, V5E_LLAMA70B, BaseProfile,

@@ -119,13 +119,18 @@ class PoolSizing:
                     prefill_mfu: Optional[float] = None,
                     hol_inflation: Optional[float] = None,
                     min_instances: int = 0,
-                    extra_instances: int = 0) -> "PoolSizing":
+                    extra_instances: int = 0,
+                    max_instances: int = 0) -> "PoolSizing":
         """SLO-loop re-provisioning knob (core.slo / DESIGN.md §5): re-derive
         the instance count under a recalibrated effective prefill MFU,
         head-of-line inflation factor and/or an instance-count floor,
         preserving every provision-time adjustment (e.g. FleetOpt's
-        migrated-token backout of `tokens_per_s`) and never *shrinking* a
-        pool — SLO compliance only adds capacity."""
+        migrated-token backout of `tokens_per_s`).  The grow levers never
+        *shrink* a pool — SLO compliance only adds capacity; `max_instances`
+        (> 0) is the trim phase's cap, applied last so a measured-compliant
+        bisection can shave the geometric step's overshoot below what the
+        recalibrated bounds would provision (the cap encodes a *measured*
+        compliance fact that overrides the pessimistic closed form)."""
         if self.arrival_rate <= 0:
             return self
         if hol_inflation is not None:
@@ -145,6 +150,8 @@ class PoolSizing:
         self.instances = max(self.instances, self.decode_bound,
                              self.prefill_bound, int(min_instances), 1)
         self.instances += max(int(extra_instances), 0)
+        if max_instances > 0:
+            self.instances = min(self.instances, max(int(max_instances), 1))
         self._operating_point()
         return self
 
@@ -203,28 +210,38 @@ class PoolOverride:
     occupancy factor (raising both bounds), `min_instances` ratchets the
     pool to at least that capacity (levers take a max, they never
     compound), and `extra_instances` forces additional capacity beyond
-    every bound.  Applied via `apply_overrides`.
+    every bound.  `max_instances` (> 0) caps the pool from above — the
+    trim phase's lever, set only from a *measured*-compliant simulation
+    (DESIGN.md §5).  Applied via `apply_overrides`.
     """
 
     prefill_mfu: Optional[float] = None
     hol_inflation: Optional[float] = None
     min_instances: int = 0
     extra_instances: int = 0
+    max_instances: int = 0
 
 
 def apply_overrides(report: FleetReport,
                     overrides: Dict[str, PoolOverride], *,
-                    roles: List[str], streamed_params: float) -> FleetReport:
+                    roles: List[str],
+                    streamed_params) -> FleetReport:
     """Recalibrate `report`'s pools (ascending-window order, one role name
-    per pool) in place with the given per-role overrides."""
+    per pool) in place with the given per-role overrides.  In a
+    model-heterogeneous fleet each pool streams its *own* model's
+    parameters, so `streamed_params` may be a {role: params} dict (a bare
+    float applies to every pool — the homogeneous case)."""
     pools = sorted(report.pools, key=lambda p: p.window)
     assert len(roles) == len(pools), (roles, [p.name for p in pools])
     for role, pool in zip(roles, pools):
         o = overrides.get(role)
+        sp = streamed_params.get(role) \
+            if isinstance(streamed_params, dict) else streamed_params
         if o is not None:
-            pool.recalibrate(streamed_params=streamed_params,
+            pool.recalibrate(streamed_params=sp,
                              prefill_mfu=o.prefill_mfu,
                              hol_inflation=o.hol_inflation,
                              min_instances=o.min_instances,
-                             extra_instances=o.extra_instances)
+                             extra_instances=o.extra_instances,
+                             max_instances=o.max_instances)
     return report

@@ -18,19 +18,34 @@ from .profiles import BaseProfile, computed_profile
 from .roofline import DecodeRoofline
 
 
+def with_dispatch_floor(profile: BaseProfile,
+                        dispatch_ms: float) -> BaseProfile:
+    """`profile` with an expert all-to-all dispatch cost added to the
+    per-iteration latency floor: tau(n, L) = (W + dispatch) + H(L) n.
+
+    The floor is paid every decode iteration regardless of batch — exactly
+    the mechanism that collapses the paper's 5.1x MoE upper bound toward
+    ~1.5x at 10 ms dispatch.  Shared by `moe_profile` and the serving
+    layer's `moe_pool` / `moe_semantic` topology kinds, so the analytical
+    prediction and the simulated fleet price dispatch identically."""
+    if dispatch_ms < 0.0:
+        raise ValueError(f"dispatch_ms must be >= 0, got {dispatch_ms}")
+    if dispatch_ms == 0.0:
+        return profile
+    rl = profile.roofline
+    return dataclasses.replace(
+        profile, roofline=DecodeRoofline(w_ms=rl.w_ms + dispatch_ms,
+                                         h0_ms=rl.h0_ms,
+                                         l_calib=rl.l_calib))
+
+
 def moe_profile(model: ModelSpec, chip: ChipSpec,
                 power_model: Optional[PowerModel] = None, *, tp: int = 8,
                 dispatch_ms: float = 0.0, **kw) -> BaseProfile:
     """ComputedProfile with the active-parameter W override + optional
     dispatch overhead added to the per-iteration latency floor."""
-    prof = computed_profile(model, chip, power_model, tp=tp, **kw)
-    if dispatch_ms > 0.0:
-        rl = prof.roofline
-        prof = dataclasses.replace(
-            prof, roofline=DecodeRoofline(w_ms=rl.w_ms + dispatch_ms,
-                                          h0_ms=rl.h0_ms,
-                                          l_calib=rl.l_calib))
-    return prof
+    return with_dispatch_floor(
+        computed_profile(model, chip, power_model, tp=tp, **kw), dispatch_ms)
 
 
 @dataclasses.dataclass(frozen=True)

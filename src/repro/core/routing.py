@@ -13,7 +13,18 @@ A topology turns (workload, profile(s)) into provisioned pools:
                   <= gamma * B_short, no HOL penalty (the overflow headroom /
                   compress-and-route mechanism absorbs mispredictions).
                   `optimize_gamma` grid-searches gamma for fleet tok/W.
-  Semantic      — §5.1: small model for short requests, large for long.
+  Semantic      — §5.1: small *model* for short requests, large for long —
+                  the model-heterogeneous topology.  Honest routing
+                  (predicted total vs B_short) with FleetOpt-style overflow
+                  headroom (serve at gamma * B_short), a semantic-classifier
+                  `misroute_rate`, and an escalation hop: a true-large
+                  request misrouted into the small-model pool is detected
+                  after `detect_tokens` of decode and re-served from scratch
+                  by the large pool; its small-pool work counts as
+                  non-output energy (subtracted from tokens_per_s, the
+                  FleetOpt migrated-token convention).  Served end-to-end
+                  by serving.fleetsim (`semantic` / `semantic_fleetopt` /
+                  `moe_semantic` kinds).
 """
 from __future__ import annotations
 
@@ -29,6 +40,11 @@ from .workloads import Workload
 
 LONG_WINDOW = 65536   # paper: homogeneous / long pool serve at 64K
 HOL_INFLATION = 2.15  # calibrated vs Table 3 (plain Pool, long pool)
+# Decode tokens a semantic misroute generates in the small-model pool
+# before the quality monitor catches it and escalates (shared by the
+# analytical Semantic model and the serving-side SemanticRouter so the
+# two layers price the same detection latency).
+ESCALATION_DETECT_TOKENS = 32
 
 
 def _subset_stats(prompts: np.ndarray, outputs: np.ndarray,
@@ -196,37 +212,124 @@ def optimize_gamma(workload: Workload, profile: BaseProfile, model: ModelSpec,
 
 @dataclasses.dataclass
 class Semantic:
-    """§5.1 semantic routing: small model short pool, large model long pool."""
+    """§5.1 semantic routing: small-model short pool, large-model long pool.
+
+    Honest routing (the classifier sees prompt + E[output], like FleetOpt),
+    with two error channels priced explicitly:
+
+      * length mispredictions — a correctly-classified short request whose
+        actual total outgrows the small pool's serve window
+        (gamma * b_short) migrates: re-prefilled and fully served by the
+        large pool, its small-pool decode work wasted (gamma = 1 is the
+        headroom-free `semantic` serving kind; gamma > 1 the
+        `semantic_fleetopt` kind).
+      * semantic misroutes — a fraction `misroute_rate` of the classifier's
+        decisions flip.  A true-short request sent large is merely served
+        inefficiently; a true-large request sent small burns its (large)
+        prompt prefill plus `detect_tokens` of small-model decode before
+        escalation re-serves it from scratch in the large pool.
+
+    Wasted small-pool work follows the FleetOpt migrated-token convention:
+    the load is provisioned for, the output tokens are subtracted.
+    """
 
     b_short: int
     small_profile: BaseProfile
     small_model: ModelSpec
-    short_window: int = 8192
+    gamma: float = 2.0             # small-pool overflow headroom
     long_window: int = LONG_WINDOW
+    misroute_rate: float = 0.0
+    detect_tokens: int = ESCALATION_DETECT_TOKENS
+
+    @property
+    def short_window(self) -> int:
+        return int(self.gamma * self.b_short)
 
     def provision(self, workload: Workload, profile: BaseProfile,
                   model: ModelSpec) -> FleetReport:
+        if not 0.0 <= self.misroute_rate < 1.0:
+            raise ValueError(f"misroute_rate must be in [0, 1), got"
+                             f" {self.misroute_rate}")
+        if self.gamma < 1.0:
+            raise ValueError(f"gamma must be >= 1, got {self.gamma}")
         p, o = workload.prompts, workload.outputs
-        short_mask = (p + o) <= self.b_short
         lam = workload.arrival_rate
-        s = _subset_stats(p, o, short_mask)
-        l = _subset_stats(p, o, ~short_mask)
+        r = self.misroute_rate
+        routed_small = (p + workload.mean_output) <= self.b_short
+        overflow = routed_small & ((p + o) > self.short_window)
+        legit = routed_small & ~overflow
+        s = _subset_stats(p, o, legit)
+        v = _subset_stats(p, o, overflow)
+        l = _subset_stats(p, o, ~routed_small)
+        # an overflower decodes only until its KV hits the serve window
+        # (then evicts), so its wasted small-pool output is window - prompt,
+        # not its full sampled output
+        ovf_waste = float(np.maximum(
+            self.short_window - p[overflow], 0.0).mean()) \
+            if overflow.any() else 0.0
+        # --- small-model pool: correctly-routed shorts (1 - r of them)
+        # plus the misrouted true-larges (r of the large class), which
+        # prefill their big prompts here and decode detect_tokens each
+        # before escalating ------------------------------------------------
+        lam_legit = lam * (1.0 - r) * s["frac"]
+        lam_ovf = lam * (1.0 - r) * v["frac"]
+        lam_esc = lam * r * l["frac"]
+        lam_small = lam_legit + lam_ovf + lam_esc
+        if lam_small > 0:
+            w_legit, w_ovf, w_esc = (lam_legit / lam_small,
+                                     lam_ovf / lam_small,
+                                     lam_esc / lam_small)
+            s_out = (w_legit * s["mean_output"] + w_ovf * ovf_waste
+                     + w_esc * self.detect_tokens)
+            s_prompt = (w_legit * s["mean_prompt"] + w_ovf * v["mean_prompt"]
+                        + w_esc * l["mean_prompt"])
+            s_ctx = (w_legit * s["mean_context"]
+                     + w_ovf * (v["mean_prompt"] + ovf_waste / 2.0)
+                     + w_esc * (l["mean_prompt"] + self.detect_tokens / 2.0))
+        else:
+            s_out = s_prompt = s_ctx = 0.0
+        # --- large-model pool: correctly-routed larges, misrouted shorts,
+        # and the re-served overflow + escalation traffic ------------------
+        lam_mis_s = lam * r * s["frac"] + lam * r * v["frac"]
+        lam_large = lam * (1.0 - r) * l["frac"] + lam_mis_s \
+            + lam_ovf + lam_esc
+        if lam_large > 0:
+            comps = (  # (rate, output, context, prompt)
+                (lam * (1.0 - r) * l["frac"] + lam_esc,
+                 l["mean_output"], l["mean_context"], l["mean_prompt"]),
+                (lam * r * s["frac"],
+                 s["mean_output"], s["mean_context"], s["mean_prompt"]),
+                (lam * r * v["frac"] + lam_ovf,
+                 v["mean_output"], v["mean_context"], v["mean_prompt"]),
+            )
+            l_out = sum(c[0] * c[1] for c in comps) / lam_large
+            l_ctx = sum(c[0] * c[2] for c in comps) / lam_large
+            l_prompt = sum(c[0] * c[3] for c in comps) / lam_large
+        else:
+            l_out = l_ctx = l_prompt = 0.0
         pools = [
             PoolSizing(name=f"semantic-small-{self.short_window // 1024}K",
                        window=self.short_window, profile=self.small_profile,
-                       arrival_rate=lam * s["frac"],
-                       mean_output=s["mean_output"],
-                       mean_context=s["mean_context"],
-                       mean_prompt=s["mean_prompt"]),
+                       arrival_rate=lam_small,
+                       mean_output=s_out, mean_context=s_ctx,
+                       mean_prompt=s_prompt),
             PoolSizing(name=f"semantic-large-{self.long_window // 1024}K",
                        window=self.long_window, profile=profile,
-                       arrival_rate=lam * l["frac"],
-                       mean_output=l["mean_output"],
-                       mean_context=l["mean_context"],
-                       mean_prompt=l["mean_prompt"]),
+                       arrival_rate=lam_large,
+                       mean_output=l_out, mean_context=l_ctx,
+                       mean_prompt=l_prompt),
         ]
-        # NOTE: sizing uses each pool's own streamed params.
+        # NOTE: sizing uses each pool's own streamed params — the point of
+        # the topology (DESIGN.md §9).
         pools[0].size(streamed_params=self.small_model.streamed_params)
         pools[1].size(streamed_params=model.streamed_params)
+        # wasted small-pool decode (overflow migrations + escalated
+        # misroutes) is provisioned load that produces no counted output
+        if pools[0].instances and (lam_ovf > 0 or lam_esc > 0):
+            pools[0].tokens_per_s -= (lam_ovf * ovf_waste
+                                      + lam_esc * self.detect_tokens)
         return FleetReport(pools=[q for q in pools if q.arrival_rate > 0],
-                           label=f"Semantic {self.b_short // 1024}K")
+                           label=f"Semantic {self.b_short // 1024}K"
+                                 f"/g={self.gamma:g}"
+                                 + (f"/mr={self.misroute_rate:g}"
+                                    if self.misroute_rate else ""))

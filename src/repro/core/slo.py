@@ -55,14 +55,17 @@ _MIN_MFU = 0.02
 class SLOSpec:
     """Latency service-level objective (paper §4: P99 TTFT <= 500 ms).
 
-    `tpot_p99_ms` optionally constrains the P99 time-per-output-token the
-    meters already report (None = TTFT-only, the paper's constraint).  In
-    a disaggregated fleet the two constraints pull on different pools:
-    prefill instances drive TTFT, decode instances drive TPOT.
+    `tpot_p99_ms` optionally constrains the P99 time-per-output-token and
+    `e2e_p99_s` the P99 end-to-end request latency the meters already
+    report (None = TTFT-only, the paper's constraint).  The constraints
+    pull on different pools: TTFT violations grow the pool that drained
+    the request's prefill, TPOT and e2e violations grow the pool that
+    decoded it (in a disaggregated fleet those are different fleets).
     """
 
     ttft_p99_s: float = 0.5
     tpot_p99_ms: Optional[float] = None
+    e2e_p99_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -79,6 +82,7 @@ class SLORound:
     measured_tok_per_watt: float         # all-in, steady-state window
     measured_decode_tok_per_watt: float
     tpot_p99_ms: float = 0.0             # measured, fleet-wide
+    e2e_p99_s: float = 0.0               # measured, fleet-wide
 
 
 @dataclasses.dataclass
@@ -95,6 +99,12 @@ class SLOSizingResult:
     overrides: Dict[str, PoolOverride]   # accumulated recalibrations
     rounds: List[SLORound]
     compliant: bool
+    # trim phase (DESIGN.md §5): per-role instances shaved back off the
+    # geometric step's overshoot after compliance, and the number of
+    # measured bisection trials it took.  The trials are not SLORounds —
+    # `rounds` stays the monotone grow-only audit trail.
+    trimmed: Dict[str, int] = dataclasses.field(default_factory=dict)
+    trim_rounds: int = 0
 
     @property
     def ttft_p99_s(self) -> float:
@@ -126,6 +136,10 @@ class SLOSizingResult:
         return self.plan.instances - self.unconstrained.instances
 
     @property
+    def instances_trimmed(self) -> int:
+        return sum(self.trimmed.values())
+
+    @property
     def calibrated_prefill_mfu(self) -> Dict[str, float]:
         """Effective per-pool prefill MFU the loop converged to (roles not
         listed kept the closed-form PREFILL_MFU)."""
@@ -143,6 +157,7 @@ class SLOSizingResult:
                         self.report["fleet"].get("tpot_p99_ms", 0.0)), 3),
                     instances=self.plan.instances,
                     added=self.instances_added,
+                    trimmed=self.instances_trimmed,
                     rounds=len(self.rounds),
                     compliant=self.compliant)
 
@@ -154,6 +169,11 @@ def size_to_slo(kind: str, workload: Workload, profile: BaseProfile,
                 slo: SLOSpec = SLOSpec(),
                 n_requests: int = 3000, seed: int = 0,
                 max_rounds: int = 8, prefill_chunk: int = 512,
+                small_model: Optional[ModelSpec] = None,
+                small_profile: Optional[BaseProfile] = None,
+                misroute_rate: float = 0.0,
+                dispatch_ms: float = 0.0,
+                trim: bool = True,
                 long_window: Optional[int] = None) -> SLOSizingResult:
     """Iteratively re-provision `kind` until the *measured* TTFT p99 meets
     the SLO (or `max_rounds` is exhausted — `compliant` reports which).
@@ -169,6 +189,20 @@ def size_to_slo(kind: str, workload: Workload, profile: BaseProfile,
     effective prefill MFU backed off by the *fleet* TTFT overshoot and
     the instance floor stepped up by the same factor (at least one
     instance per round, for guaranteed progress).
+
+    Works for every topology FleetSim serves, including the
+    model-heterogeneous kinds (`semantic` / `semantic_fleetopt` /
+    `moe_pool` / `moe_semantic` — pass `small_model` / `small_profile` /
+    `misroute_rate` / `dispatch_ms` through to `build_topology`).
+
+    After compliance, a **trim phase** (`trim=True`) bisects each grown
+    pool's instance count back down toward its round-0 sizing, keeping
+    only capacity the measured SLO actually needs — the geometric step
+    converges from above with up to ~1.5x overshoot, and the bisection
+    claws that back (`SLOSizingResult.trimmed`).  Every trial re-measures
+    the full fleet, so the final report is always measured-compliant;
+    trials never enter `rounds` (which stays the monotone grow-only audit
+    trail).
     """
     # serving imports are lazy: core stays importable without the serving
     # layer, and the serving layer itself imports core.fleet
@@ -179,6 +213,30 @@ def size_to_slo(kind: str, workload: Workload, profile: BaseProfile,
     if long_window is None:
         long_window = int(max(windows)) if (kind == "multipool" and windows) \
             else LONG_WINDOW
+
+    def measure(ovr: Dict[str, PoolOverride]):
+        """Provision with `ovr` and run the fixed-seed trace end-to-end."""
+        policy, plan, registry = build_topology(
+            kind, workload, profile, model, b_short=b_short, gamma=gamma,
+            long_window=long_window, windows=windows,
+            pool_overrides=ovr or None, small_model=small_model,
+            small_profile=small_profile, misroute_rate=misroute_rate,
+            dispatch_ms=dispatch_ms, misroute_seed=seed)
+        sim = FleetSim(policy, plan, registry=registry,
+                       prefill_chunk=prefill_chunk, rng_seed=seed)
+        reqs = trace_requests(workload, n_requests, seed=seed,
+                              max_total=long_window)
+        report = sim.run(reqs)
+        return policy, plan, sim, report
+
+    def meets(report: Dict[str, dict]) -> bool:
+        f = report["fleet"]
+        return (float(f.get("ttft_p99_s", 0.0)) <= slo.ttft_p99_s
+                and (slo.tpot_p99_ms is None
+                     or float(f.get("tpot_p99_ms", 0.0)) <= slo.tpot_p99_ms)
+                and (slo.e2e_p99_s is None
+                     or float(f.get("e2e_p99_s", 0.0)) <= slo.e2e_p99_s))
+
     overrides: Dict[str, PoolOverride] = {}
     rounds: List[SLORound] = []
     unconstrained: Optional[FleetReport] = None
@@ -189,10 +247,7 @@ def size_to_slo(kind: str, workload: Workload, profile: BaseProfile,
     grown_last: set = set()
     saturated: set = set()
     for round_i in range(max_rounds):
-        policy, plan = build_topology(
-            kind, workload, profile, model, b_short=b_short, gamma=gamma,
-            long_window=long_window, windows=windows,
-            pool_overrides=overrides or None)
+        policy, plan, sim, report = measure(overrides)
         if unconstrained is None:
             # round 0 has no overrides: this plan IS the pure Eq. 4 sizing
             # (later rounds re-provision fresh PoolSizing objects, so it
@@ -205,13 +260,9 @@ def size_to_slo(kind: str, workload: Workload, profile: BaseProfile,
                         for role, pool in zip(
                             topology_roles(kind, plan),
                             sorted(plan.pools, key=lambda p: p.window))}
-        sim = FleetSim(policy, plan, model=model,
-                       prefill_chunk=prefill_chunk, rng_seed=seed)
-        reqs = trace_requests(workload, n_requests, seed=seed,
-                              max_total=long_window)
-        report = sim.run(reqs)
         fleet_p99 = float(report["fleet"].get("ttft_p99_s", 0.0))
         fleet_tpot = float(report["fleet"].get("tpot_p99_ms", 0.0))
+        fleet_e2e = float(report["fleet"].get("e2e_p99_s", 0.0))
         per_pool = {role: float(lat.get("ttft_p99_s", 0.0))
                     for role, lat in sim.latency_by_role().items()}
         # violation attribution: the fleet p99 <= SLO iff at most
@@ -219,8 +270,8 @@ def size_to_slo(kind: str, workload: Workload, profile: BaseProfile,
         # contribution to that fleet-wide violator budget.  A TTFT
         # violation is attributed to the pool that drained the request's
         # prefill (in a disagg fleet that is the prefill pool: decode
-        # capacity cannot buy TTFT there); a TPOT violation (when the SLO
-        # constrains TPOT) to the pool that decoded the request.
+        # capacity cannot buy TTFT there); a TPOT or e2e violation (when
+        # the SLO constrains them) to the pool that decoded the request.
         violators = {role: 0 for role in sim.order}
         observations = {role: 0 for role in sim.order}
         for role in sim.order:
@@ -236,6 +287,10 @@ def size_to_slo(kind: str, workload: Workload, profile: BaseProfile,
                         / (r.n_generated - 1)
                     if tpot_ms > slo.tpot_p99_ms:
                         violators[role] += 1
+                if slo.e2e_p99_s is not None and r.finish_time >= 0:
+                    observations[role] += 1
+                    if r.finish_time - r.arrival_time > slo.e2e_p99_s:
+                        violators[role] += 1
         n_obs = max(sum(observations.values()), 1)
         budget = int(0.01 * n_obs)
         rounds.append(SLORound(
@@ -243,14 +298,14 @@ def size_to_slo(kind: str, workload: Workload, profile: BaseProfile,
             instances={role: len(sim.groups[role].engines)
                        for role in sim.order},
             ttft_p99_s=fleet_p99, tpot_p99_ms=fleet_tpot,
+            e2e_p99_s=fleet_e2e,
             per_pool_ttft_p99_s=per_pool,
             violators=violators, budget=budget,
             analytical_tok_per_watt=plan.tok_per_watt,
             measured_tok_per_watt=float(report["fleet"]["tok_per_watt"]),
             measured_decode_tok_per_watt=float(
                 report["fleet"]["decode_tok_per_watt"])))
-        if fleet_p99 <= slo.ttft_p99_s and (
-                slo.tpot_p99_ms is None or fleet_tpot <= slo.tpot_p99_ms):
+        if meets(report):
             compliant = True
             break
         # a pool that was grown last round but whose violator count did
@@ -274,6 +329,8 @@ def size_to_slo(kind: str, workload: Workload, profile: BaseProfile,
         overshoot = fleet_p99 / slo.ttft_p99_s
         if slo.tpot_p99_ms:
             overshoot = max(overshoot, fleet_tpot / slo.tpot_p99_ms)
+        if slo.e2e_p99_s:
+            overshoot = max(overshoot, fleet_e2e / slo.e2e_p99_s)
         step = min(max(overshoot, _MIN_STEP), _MAX_STEP)
         roles = topology_roles(kind, plan)
         for role in violating:
@@ -294,7 +351,38 @@ def size_to_slo(kind: str, workload: Workload, profile: BaseProfile,
                                         1))
         prev_violators = violators
         grown_last = set(violating)
+    # --- trim phase: bisect the geometric step's capacity overshoot back
+    # down (ROADMAP open item).  Every candidate is measured end-to-end,
+    # so a kept cap is a *verified* compliance fact; pools are trimmed
+    # most-grown-first and each pool's accepted cap stays in force while
+    # the next is bisected.
+    trimmed: Dict[str, int] = {}
+    trim_rounds = 0
+    if trim and compliant and overrides and len(rounds) > 1:
+        counts = dict(rounds[-1].instances)
+        floors = rounds[0].instances
+        grown = sorted((r for r in counts
+                        if counts[r] > floors.get(r, counts[r])),
+                       key=lambda r: counts[r] - floors[r], reverse=True)
+        for role in grown:
+            lo, best = floors[role], counts[role]
+            o = overrides[role]   # grown roles always carry an override
+            while lo < best:
+                mid = (lo + best) // 2
+                o.max_instances = mid
+                trial = measure(overrides)
+                trim_rounds += 1
+                if meets(trial[3]):
+                    best = mid
+                    policy, plan, sim, report = trial
+                else:
+                    lo = mid + 1
+            o.max_instances = best if best < counts[role] else 0
+            if best < counts[role]:
+                trimmed[role] = counts[role] - best
+                counts[role] = best
     return SLOSizingResult(
         kind=kind, workload=workload.name, slo=slo, policy=policy,
         plan=plan, unconstrained=unconstrained, report=report,
-        overrides=overrides, rounds=rounds, compliant=compliant)
+        overrides=overrides, rounds=rounds, compliant=compliant,
+        trimmed=trimmed, trim_rounds=trim_rounds)

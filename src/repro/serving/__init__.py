@@ -1,13 +1,15 @@
 from .energy import EnergyMeter
-from .engine import PoolEngine
+from .engine import PoolEngine, scaled_prefill_chunk
 from .fleetsim import (FleetSim, PoolGroup, SimVsAnalytical,
                        analytical_decode_tok_per_watt, build_topology,
                        simulate_topology, topology_roles, trace_requests)
+from .models import ModelBinding, ModelProfileRegistry
 from .request import Request, synthetic_requests
-from .router import ContextRouter, RouterPolicy
+from .router import SEMANTIC_KINDS, ContextRouter, RouterPolicy
 
 __all__ = ["EnergyMeter", "PoolEngine", "Request", "synthetic_requests",
            "ContextRouter", "RouterPolicy", "FleetSim", "PoolGroup",
            "SimVsAnalytical", "analytical_decode_tok_per_watt",
            "build_topology", "simulate_topology", "topology_roles",
-           "trace_requests"]
+           "trace_requests", "ModelBinding", "ModelProfileRegistry",
+           "SEMANTIC_KINDS", "scaled_prefill_chunk"]

@@ -60,12 +60,31 @@ from typing import Deque, Dict, List, Optional
 import numpy as np
 
 from repro.core.fleet import PREFILL_MFU
+from repro.core.hardware import H100
 from repro.core.profiles import BaseProfile
 
 from .energy import EnergyMeter
 from .request import Request, latency_percentiles
 
 _LCG_A, _LCG_C = 1664525, 1013904223   # Numerical Recipes LCG
+_NEVER = np.iinfo(np.int32).max        # escalate_at sentinel: no escalation
+
+
+def scaled_prefill_chunk(profile: BaseProfile, base: int = 512,
+                         floor: int = 64) -> int:
+    """Prefill-chunk budget scaled by the profile's HBM bandwidth relative
+    to the H100 the base chunk was calibrated on.
+
+    Chunked prefill rides decode iterations, and a faster generation's
+    iterations are shorter in proportion to its bandwidth — so a *constant*
+    chunk caps prefill throughput at the H100 rate and squanders the new
+    chip's surplus FLOPs on the prompt phase (the measured §4.2
+    generation-gain compression of DESIGN.md §5).  Scaling the chunk by the
+    bandwidth ratio keeps prefill tokens *per second* generation-invariant:
+    B200 (8/3.35x) carries ~2.4x the prompt tokens per (2.4x shorter)
+    iteration."""
+    ratio = profile.chip.mem_bw_Bps / H100.mem_bw_Bps
+    return max(int(round(base * ratio)), floor)
 
 
 class PoolEngine:
@@ -77,7 +96,8 @@ class PoolEngine:
                  respect_arrival: bool = False,
                  streamed_params: Optional[float] = None,
                  vocab: int = 32000, phase: str = "decode",
-                 prefill_mfu: Optional[float] = None):
+                 prefill_mfu: Optional[float] = None,
+                 dispatch_ms: float = 0.0):
         self.cfg, self.params = cfg, params
         self.window = window
         self.name = name
@@ -103,6 +123,10 @@ class PoolEngine:
         self.respect_arrival = respect_arrival
         self.vocab = vocab
         self.meter = EnergyMeter(profile)
+        # MoE all-to-all attribution: the floor is already inside the
+        # profile roofline's w_ms (core.moe.with_dispatch_floor); telling
+        # the meter lets it label that share of every decode charge
+        self.meter.dispatch_s = max(dispatch_ms, 0.0) * 1e-3
         self.queue: Deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * self.n_slots
         n = self.n_slots
@@ -112,11 +136,14 @@ class PoolEngine:
         self.m_gen = np.zeros(n, np.int32)          # ...metered in-window
         self.max_new = np.zeros(n, np.int32)
         self.prefill_left = np.zeros(n, np.int64)   # unmetered prefill tokens
+        self.escalate_at = np.full(n, _NEVER, np.int32)  # misroute detection
         self._active = np.zeros(n, bool)
         self.preempted = 0
+        self.n_escalated = 0                        # misroutes evicted here
         self.slot_seconds = 0.0                     # occupancy integral
         self.completed: List[Request] = []
         self.overflowed: List[Request] = []         # evicted at the window
+        self.escalated: List[Request] = []          # semantic misroutes out
         self.handoff: List[Request] = []            # prefill-phase outbox
         self.relayed: List[Request] = []            # all handed-off (stats)
         if cfg is not None:
@@ -186,6 +213,8 @@ class PoolEngine:
                 self.max_new[slot] = req.max_new_tokens
                 self.prefill_left[slot] = 0
                 self.gen_count[slot] = 1
+                self.escalate_at[slot] = req.escalate_at \
+                    if req.escalate_at is not None else _NEVER
                 self.tokens[slot] = int(req.generated[0]) if req.generated \
                     else int((np.int64(req.rid) * _LCG_A + self._seed
                               + _LCG_C) % self.vocab)
@@ -210,6 +239,8 @@ class PoolEngine:
             self._active[slot] = True
             self.pos[slot] = plen
             self.max_new[slot] = req.max_new_tokens
+            self.escalate_at[slot] = req.escalate_at \
+                if req.escalate_at is not None else _NEVER
             if self.prefill_chunk:
                 # chunked interleave: prefill energy rides decode iterations
                 self.prefill_left[slot] = plen
@@ -250,6 +281,7 @@ class PoolEngine:
         self.prefill_left[slot] = 0
         self.gen_count[slot] = 0
         self.m_gen[slot] = 0
+        self.escalate_at[slot] = _NEVER
 
     def preempt(self, slot: int) -> None:
         """Evict a running request back to the queue (its KV is dropped;
@@ -272,13 +304,13 @@ class PoolEngine:
             _, victim = min(ages)
             self.preempt(victim)
 
-    def _evict_overflow(self, slot: int) -> None:
-        """FleetOpt migration: the request hit the pool window mid-flight.
-        Its decode work so far is wasted (it re-prefills elsewhere), so the
-        emitted tokens are backed out of the meter — mirroring the
-        analytical accounting in core.routing.FleetOpt.provision, where
-        migrated requests' short-pool output is subtracted from
-        tokens_per_s.  The energy stays: it was really spent."""
+    def _back_out_and_evict(self, slot: int) -> Request:
+        """Shared eviction bookkeeping: the slot's decode work so far is
+        wasted (the request re-prefills elsewhere), so the emitted tokens
+        are backed out of the meter — mirroring the analytical accounting
+        in core.routing (FleetOpt and Semantic both subtract wasted-pool
+        output from tokens_per_s).  The energy stays: it was really
+        spent."""
         req = self.slots[slot]
         # metered decode tokens only: the first token came from prefill;
         # the windowed counter gives back exactly the slot's in-window share
@@ -288,9 +320,26 @@ class PoolEngine:
         req.prefill_done = False    # its KV is dropped: the destination
         req.preemptions += 1        # (re-)prefills from scratch
         req.ready_time = self.meter.sim_time_s
-        self.overflowed.append(req)
-        self._clear_slot(slot)
+        req.escalate_at = None      # any eviction lands the request in the
+        self._clear_slot(slot)      # large pool: never re-escalate there
         self.preempted += 1
+        return req
+
+    def _evict_overflow(self, slot: int) -> None:
+        """FleetOpt migration: the request hit the pool window mid-flight
+        and re-prefills one rung up the ladder."""
+        self.overflowed.append(self._back_out_and_evict(slot))
+
+    def _evict_escalation(self, slot: int) -> None:
+        """Semantic misroute detected: the small model generated
+        `escalate_at` tokens before the quality monitor caught it.  The
+        request leaves for the large-model pool (FleetSim's escalation
+        edge) to be re-served from scratch; the wasted small-pool tokens
+        were backed out, so escalated output is never double-counted."""
+        req = self._back_out_and_evict(slot)   # clears the escalation tag
+        req.escalations += 1
+        self.n_escalated += 1
+        self.escalated.append(req)
 
     # --- one continuous-batching iteration ------------------------------
     def _next_tokens(self) -> np.ndarray:
@@ -398,11 +447,19 @@ class PoolEngine:
             self.gen_count[dec] += 1
             self.pos[dec] += 1
             done = dec & (self.gen_count >= self.max_new)
-            at_ceiling = dec & ~done & (self.pos >= self.window - 1)
+            # semantic misroute detection fires before the window ceiling:
+            # a misrouted giant prompt escalates on quality, not on length
+            # (a request that finishes under the detection latency simply
+            # completes — short outputs never reach the monitor)
+            escalate = dec & ~done & (self.gen_count >= self.escalate_at)
+            at_ceiling = dec & ~done & ~escalate \
+                & (self.pos >= self.window - 1)
             if not self.evict_on_overflow:
                 done |= at_ceiling      # legacy: truncate at the window
             for i in np.flatnonzero(done):  # touches finishing slots only
                 self._finish(int(i))
+            for i in np.flatnonzero(escalate):
+                self._evict_escalation(int(i))
             if self.evict_on_overflow:
                 for i in np.flatnonzero(at_ceiling):
                     self._evict_overflow(int(i))

@@ -20,9 +20,11 @@ Execution model (event-driven, per-engine timelines):
     — except for cross-pool request flow, which is always *forward* in the
     pool order: overflow migrations flow toward larger windows (pool i ->
     pool i+1 in the admission ladder; FleetOpt's short -> long is the K = 2
-    case), and the disaggregated kinds add the prefill -> decode KV-handoff
+    case), the disaggregated kinds add the prefill -> decode KV-handoff
     hop within each window slice (plus decode-short -> prefill-long
-    re-prefill on overflow).  Both dependencies form a DAG, so pools run in
+    re-prefill on overflow), and the semantic kinds add the small-model ->
+    large-model escalation hop for detected misroutes (serving.router).
+    Every dependency forms a DAG, so pools run in
     topological order — ascending window, prefill before its paired decode
     — each pool drains, and its evicted / handed-off requests are injected
     into the destination pool's (time-sorted) queue carrying their eviction
@@ -56,16 +58,19 @@ import numpy as np
 from repro.core.disagg import (HANDOFF_J_PER_BYTE, INTERCONNECT_BPS,
                                Disaggregated)
 from repro.core.fleet import FleetReport, PoolOverride, apply_overrides
-from repro.core.modelspec import ModelSpec
+from repro.core.modelspec import LLAMA31_8B, ModelSpec
+from repro.core.moe import with_dispatch_floor
 from repro.core.multipool import MultiPool
-from repro.core.profiles import BaseProfile
-from repro.core.routing import LONG_WINDOW, FleetOpt, Homogeneous, TwoPool
+from repro.core.profiles import BaseProfile, computed_profile
+from repro.core.routing import (LONG_WINDOW, FleetOpt, Homogeneous, Semantic,
+                                TwoPool)
 from repro.core.workloads import Workload
 
-from .engine import PoolEngine
+from .engine import PoolEngine, scaled_prefill_chunk
+from .models import ModelBinding, ModelProfileRegistry
 from .request import (Request, latency_percentiles as _percentiles,
                       sample_trace)
-from .router import ContextRouter, RouterPolicy
+from .router import SEMANTIC_KINDS, ContextRouter, RouterPolicy
 
 
 def trace_requests(workload: Workload, n: int, *, seed: int = 0,
@@ -95,9 +100,14 @@ def topology_roles(kind: str, plan: FleetReport) -> List[str]:
     pools = sorted(plan.pools, key=lambda p: p.window)
     if kind == "homo":
         return ["homo"]
+    if kind == "moe_pool":
+        return ["moe"]
     if kind in ("two_pool", "fleetopt"):
         assert len(pools) == 2, [p.name for p in pools]
         return ["short", "long"]
+    if kind in SEMANTIC_KINDS:
+        assert len(pools) == 2, [p.name for p in pools]
+        return ["small", "large"]
     if kind in ("multipool", "disagg", "disagg_fleetopt"):
         return [p.name for p in pools]
     raise ValueError(kind)
@@ -108,16 +118,82 @@ def build_topology(kind: str, workload: Workload, profile: BaseProfile,
                    gamma: float = 2.0, long_window: int = LONG_WINDOW,
                    windows: Optional[Sequence[int]] = None,
                    pool_overrides: Optional[Dict[str, PoolOverride]] = None,
-                   ) -> Tuple[RouterPolicy, FleetReport]:
-    """(router policy, analytical sizing plan) for one §4 topology or a
-    K >= 3 `core.multipool` ladder (`kind="multipool"`, pass `windows`) —
-    the same provisioning the simulator instantiates and the prediction it
-    is measured against.  `pool_overrides` layers per-role SLO
-    recalibrations (core.slo) on the closed-form plan."""
+                   small_model: Optional[ModelSpec] = None,
+                   small_profile: Optional[BaseProfile] = None,
+                   misroute_rate: float = 0.0,
+                   dispatch_ms: float = 0.0,
+                   misroute_seed: int = 0,
+                   ) -> Tuple[RouterPolicy, FleetReport, ModelProfileRegistry]:
+    """(router policy, analytical sizing plan, model registry) for one §4
+    topology, a K >= 3 `core.multipool` ladder (`kind="multipool"`, pass
+    `windows`), or a model-heterogeneous kind — the same provisioning the
+    simulator instantiates and the prediction it is measured against.
+    `pool_overrides` layers per-role SLO recalibrations (core.slo) on the
+    closed-form plan.
+
+    Model-heterogeneous kinds (DESIGN.md §9):
+
+      moe_pool          — homo ladder, but `model`/`profile` are an MoE and
+                          `dispatch_ms` adds the expert all-to-all floor to
+                          every decode iteration (core.moe).
+      semantic          — §5.1: `small_model`/`small_profile` (default
+                          Llama-8B @ TP1 on the same chip) behind the
+                          B_short rung, `model` behind the long rung; no
+                          overflow headroom (small pool serves at B_short).
+      semantic_fleetopt — semantic + FleetOpt headroom: the small pool
+                          serves at gamma * B_short so output mispredictions
+                          finish in place; only semantic misroutes (rate
+                          `misroute_rate`) and >gamma*B_short overflows
+                          escalate.
+      moe_semantic      — semantic_fleetopt with the MoE as the large model.
+    """
+    if misroute_rate and kind not in SEMANTIC_KINDS:
+        raise ValueError(f"misroute_rate only applies to semantic kinds,"
+                         f" not {kind!r}")
+    if dispatch_ms and kind not in ("moe_pool", "moe_semantic"):
+        raise ValueError(f"dispatch_ms only applies to MoE kinds,"
+                         f" not {kind!r}")
+    registry = ModelProfileRegistry.homogeneous(model, profile)
     if kind == "homo":
         rep = Homogeneous(window=long_window).provision(
             workload, profile, model)
         policy = RouterPolicy(kind="homo", b_short=b_short)
+    elif kind == "moe_pool":
+        # the MoE's per-iteration weight stream is already active-params
+        # (the profile's roofline); the dispatch floor is folded into w_ms
+        # so provisioning and simulation pay it identically
+        prof = with_dispatch_floor(profile, dispatch_ms)
+        rep = Homogeneous(window=long_window).provision(
+            workload, prof, model)
+        policy = RouterPolicy(kind="moe_pool", b_short=b_short)
+        registry = ModelProfileRegistry.homogeneous(
+            model, prof, dispatch_ms=dispatch_ms)
+    elif kind in SEMANTIC_KINDS:
+        if small_model is None:
+            small_model = LLAMA31_8B
+        if small_profile is None:
+            # the paper's §5.1 small pool: the 8B-class model at TP1 on
+            # the same accelerator generation as the large pool
+            small_profile = computed_profile(
+                small_model, profile.chip, profile.power_model, tp=1)
+        large_profile = with_dispatch_floor(profile, dispatch_ms) \
+            if kind == "moe_semantic" else profile
+        sem = Semantic(b_short=b_short, small_profile=small_profile,
+                       small_model=small_model,
+                       gamma=1.0 if kind == "semantic" else gamma,
+                       long_window=long_window,
+                       misroute_rate=misroute_rate)
+        rep = sem.provision(workload, large_profile, model)
+        policy = RouterPolicy(kind=kind, b_short=b_short, gamma=sem.gamma,
+                              misroute_rate=misroute_rate,
+                              detect_tokens=sem.detect_tokens,
+                              misroute_seed=misroute_seed)
+        registry = ModelProfileRegistry(
+            default=ModelBinding(model, large_profile,
+                                 dispatch_ms=dispatch_ms))
+        registry.bind("small", ModelBinding(small_model, small_profile))
+        registry.bind("large", ModelBinding(model, large_profile,
+                                            dispatch_ms=dispatch_ms))
     elif kind == "two_pool":
         rep = TwoPool(b_short=b_short, long_window=long_window).provision(
             workload, profile, model)
@@ -168,10 +244,11 @@ def build_topology(kind: str, workload: Workload, profile: BaseProfile,
     else:
         raise ValueError(kind)
     if pool_overrides:
-        apply_overrides(rep, pool_overrides,
-                        roles=topology_roles(kind, rep),
-                        streamed_params=model.streamed_params)
-    return policy, rep
+        roles = topology_roles(kind, rep)
+        apply_overrides(rep, pool_overrides, roles=roles,
+                        streamed_params=registry.streamed_params_by_role(
+                            roles))
+    return policy, rep, registry
 
 
 class PoolGroup:
@@ -232,6 +309,7 @@ class PoolGroup:
                     completed=sum(len(e.completed) for e in self.engines),
                     relayed=sum(len(e.relayed) for e in self.engines),
                     preempted=sum(e.preempted for e in self.engines),
+                    escalated=sum(e.n_escalated for e in self.engines),
                     tokens=tok, joules=round(joules, 1),
                     m_tokens=sum(e.meter.m_tokens for e in self.engines),
                     m_joules=round(sum(e.meter.m_joules
@@ -244,19 +322,35 @@ class PoolGroup:
 
 
 class FleetSim:
-    """Instantiate an analytical sizing plan as a fleet of running engines."""
+    """Instantiate an analytical sizing plan as a fleet of running engines.
+
+    `registry` (serving.models) binds each role to the model its pool
+    serves; passing only `model` builds a homogeneous registry, which is
+    every pre-model-heterogeneity topology.  Each engine streams *its own
+    pool's* model bytes, and the per-engine prefill chunk is scaled by its
+    pool profile's HBM bandwidth (`scaled_prefill_chunk`) so faster
+    generations spend their surplus FLOPs on prompt processing instead of
+    idling at the H100-calibrated chunk rate."""
 
     def __init__(self, policy: RouterPolicy, plan: FleetReport, *,
-                 model: ModelSpec, prefill_chunk: int = 512,
+                 model: Optional[ModelSpec] = None,
+                 registry: Optional[ModelProfileRegistry] = None,
+                 prefill_chunk: int = 512,
                  rng_seed: int = 0,
                  kv_interconnect_Bps: float = INTERCONNECT_BPS,
                  kv_handoff_j_per_byte: float = HANDOFF_J_PER_BYTE):
         self.policy = policy
         self.plan = plan
-        self.model = model
+        pools = sorted(plan.pools, key=lambda p: p.window)
+        if registry is None:
+            if model is None:
+                raise ValueError("FleetSim needs a model or a registry")
+            registry = ModelProfileRegistry.homogeneous(
+                model, pools[0].profile)
+        self.registry = registry
+        self.model = registry.default.model
         self.kv_interconnect_Bps = kv_interconnect_Bps
         self.kv_handoff_j_per_byte = kv_handoff_j_per_byte
-        pools = sorted(plan.pools, key=lambda p: p.window)
         role_names = topology_roles(policy.kind, plan)
         roles = list(zip(role_names, pools))
         # topological DAG order: ascending window, and within a disagg
@@ -270,21 +364,27 @@ class FleetSim:
             # Overflow headroom ends at the pool window: a request routed
             # here that outgrows it migrates one hop up the ladder
             # (preemption + re-prefill in the next pool).  FleetOpt's short
-            # pool, every non-terminal multipool rung and every
-            # non-terminal disagg decode pool evict; terminal pools
-            # truncate at their window, like the token-level engine.
+            # pool, every non-terminal multipool rung, every non-terminal
+            # disagg decode pool and the semantic small-model pool evict;
+            # terminal pools truncate at their window, like the token-level
+            # engine.
             evict = (policy.kind == "fleetopt" and role == "short") \
                 or (policy.kind == "multipool" and idx < len(roles) - 1) \
+                or (policy.kind in SEMANTIC_KINDS and role == "small") \
                 or (policy.kind == "disagg_fleetopt"
                     and p.phase != "prefill" and role != terminal_decode)
+            binding = registry.for_role(role)
+            chunk = scaled_prefill_chunk(p.profile, prefill_chunk) \
+                if prefill_chunk else prefill_chunk
             engines = [
                 PoolEngine(None, None, window=p.window, profile=p.profile,
                            name=f"{p.name}#{j}",
-                           prefill_chunk=prefill_chunk,
+                           prefill_chunk=chunk,
                            phase=p.phase,
                            prefill_mfu=p.prefill_engine_mfu,
                            evict_on_overflow=evict, respect_arrival=True,
-                           streamed_params=model.streamed_params,
+                           streamed_params=binding.streamed_params,
+                           dispatch_ms=binding.dispatch_ms,
                            rng_seed=rng_seed + 7919 * j)
                 for j in range(max(p.instances, 1))]
             self.groups[role] = PoolGroup(role, engines)
@@ -293,8 +393,11 @@ class FleetSim:
         #   overflow_to — evicting role -> where its evictions re-enter
         #                 (ladder kinds: next rung; disagg: next slice's
         #                 *prefill* pool, where the request re-prefills)
+        #   escalate_to — semantic small-model role -> the large-model role
+        #                 that re-serves detected misroutes from scratch
         self.handoff_to: Dict[str, str] = {}
         self.overflow_to: Dict[str, str] = {}
+        self.escalate_to: Dict[str, str] = {}
         if policy.kind in ("disagg", "disagg_fleetopt"):
             dec_by_window = {p.window: r for r, p in decode_roles}
             pf_roles = [(r, p) for r, p in roles if p.phase == "prefill"]
@@ -306,15 +409,18 @@ class FleetSim:
                 self.overflow_to[r1] = pf_next
             # per-role whole-instance KV bytes per prompt token
             self._kv_bytes_per_tok = {
-                r: self.model.kv_bytes_per_token(tp=p.profile.tp)
-                * p.profile.tp for r, p in pf_roles}
+                r: registry.for_role(r).model.kv_bytes_per_token(
+                    tp=p.profile.tp) * p.profile.tp for r, p in pf_roles}
         else:
             for a, b in zip(self.order, self.order[1:]):
                 self.overflow_to[a] = b
+            if policy.kind in SEMANTIC_KINDS:
+                self.escalate_to["small"] = "large"
             self._kv_bytes_per_tok = {}
         self.router = ContextRouter(self.groups, policy)
         self.migrations = 0
         self.handoffs = 0
+        self.escalations = 0
         self._window: Tuple[float, float] = (0.0, float("inf"))
 
     def run(self, requests: List[Request], *, warmup_frac: float = 0.35,
@@ -351,6 +457,13 @@ class FleetSim:
                     self.migrations += len(e.overflowed)
                     inbox[dest].extend(e.overflowed)
                     e.overflowed = []
+                if e.escalated:
+                    dest = self.escalate_to.get(role)
+                    assert dest is not None, \
+                        "only the semantic small pool may escalate"
+                    self.escalations += len(e.escalated)
+                    inbox[dest].extend(e.escalated)
+                    e.escalated = []
                 if e.handoff:
                     dest = self.handoff_to[role]
                     kappa = self._kv_bytes_per_tok[role]
@@ -379,6 +492,7 @@ class FleetSim:
         out: Dict[str, dict] = {}
         completed: List[Request] = []
         tok = joules = prefill_j = idle_j = handoff_j = handoff_b = 0.0
+        dispatch_j = 0.0
         for role, grp in self.groups.items():
             out[role] = grp.stats()
             completed += grp.completed
@@ -388,6 +502,8 @@ class FleetSim:
             idle_j += sum(e.meter.m_idle_joules for e in grp.engines)
             handoff_j += sum(e.meter.m_handoff_joules for e in grp.engines)
             handoff_b += sum(e.meter.m_handoff_bytes for e in grp.engines)
+            dispatch_j += sum(e.meter.m_dispatch_joules
+                              for e in grp.engines)
         # engines that sat idle past the window end never saw those idle
         # watts: charge the gap so the fleet denominator is wall-clock honest
         t0, t1 = self._window
@@ -406,6 +522,7 @@ class FleetSim:
             completed=len(completed),
             migrations=self.migrations,
             handoffs=self.handoffs,
+            escalations=self.escalations,
             measure_window_s=(round(t0, 3), round(t1, 3)),
             tokens=int(tok), joules=round(joules, 1),
             tokens_per_s=round(tok / span, 1),
@@ -418,6 +535,12 @@ class FleetSim:
             kv_handoff_gb=round(handoff_b / 1e9, 3),
             kv_handoff_energy_frac=round(handoff_j / joules, 6) if joules
             else 0.0,
+            # MoE all-to-all attribution: the dispatch share is *inside*
+            # the decode charges (the roofline floor), so it is reported
+            # as a fraction of fleet energy, never backed out
+            moe_dispatch_joules=round(dispatch_j, 1),
+            moe_dispatch_energy_frac=round(dispatch_j / joules, 4)
+            if joules else 0.0,
             **_percentiles(completed))
         return out
 
@@ -474,18 +597,24 @@ def simulate_topology(kind: str, workload: Workload, profile: BaseProfile,
                       prefill_chunk: int = 512,
                       windows: Optional[Sequence[int]] = None,
                       pool_overrides: Optional[Dict[str, PoolOverride]] = None,
+                      small_model: Optional[ModelSpec] = None,
+                      small_profile: Optional[BaseProfile] = None,
+                      misroute_rate: float = 0.0,
+                      dispatch_ms: float = 0.0,
                       long_window: int = LONG_WINDOW) -> SimVsAnalytical:
     """Provision a topology analytically, then measure it end-to-end."""
     if arrival_rate is not None and arrival_rate != workload.arrival_rate:
         workload = dataclasses.replace(workload, arrival_rate=arrival_rate)
     if kind == "multipool" and windows:
         long_window = int(max(windows))
-    policy, plan = build_topology(kind, workload, profile, model,
-                                  b_short=b_short, gamma=gamma,
-                                  long_window=long_window, windows=windows,
-                                  pool_overrides=pool_overrides)
-    sim = FleetSim(policy, plan, model=model, prefill_chunk=prefill_chunk,
-                   rng_seed=seed)
+    policy, plan, registry = build_topology(
+        kind, workload, profile, model, b_short=b_short, gamma=gamma,
+        long_window=long_window, windows=windows,
+        pool_overrides=pool_overrides, small_model=small_model,
+        small_profile=small_profile, misroute_rate=misroute_rate,
+        dispatch_ms=dispatch_ms, misroute_seed=seed)
+    sim = FleetSim(policy, plan, registry=registry,
+                   prefill_chunk=prefill_chunk, rng_seed=seed)
     reqs = trace_requests(workload, n_requests, seed=seed,
                           max_total=long_window)
     report = sim.run(reqs)

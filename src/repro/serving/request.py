@@ -35,6 +35,16 @@ class Request:
     # names the router role that drained it (SLO-loop TTFT attribution).
     prefill_done: bool = False
     prefill_role: str = ""
+    # semantic routing (core.routing.Semantic / serving.router): set by the
+    # router when the classifier misroutes a true-large request into the
+    # small-model pool — the engine evicts it after `escalate_at` decode
+    # tokens (the quality monitor's detection latency) and FleetSim
+    # re-serves it from scratch in the large pool.  `escalations` counts
+    # those hops; `misrouted` marks every flipped decision (including
+    # short-into-large, which never escalates).
+    misrouted: bool = False
+    escalate_at: Optional[int] = None
+    escalations: int = 0
 
     @property
     def prompt_len(self) -> int:

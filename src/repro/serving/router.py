@@ -19,6 +19,24 @@ whose boundary covers its routing metric.  The three §4 topologies and the
               request enters through a prefill pool; the paired decode
               pools are fed exclusively by the KV-handoff hop inside
               serving.fleetsim, never by admission.
+  moe_pool  — one pool, the long window, served by an MoE whose profile
+              streams active params + a dispatch floor (core.moe); the
+              ladder itself is the homo single rung.
+  semantic / semantic_fleetopt / moe_semantic — §5.1 model-heterogeneous
+              routing (`SemanticRouter`): a [small @ B_short, large @ inf]
+              ladder where the rungs serve *different models*.  The
+              classifier is the ladder metric (predicted total — a length
+              proxy for task complexity) degraded by `misroute_rate`: each
+              decision flips with that probability, deterministically per
+              request id.  A true-short flipped large is just served
+              inefficiently; a true-large flipped small is tagged
+              `escalate_at = detect_tokens` — the small-model engine evicts
+              it after that many decode tokens (quality detection) and
+              FleetSim re-serves it from scratch in the large pool, its
+              small-pool tokens backed out (never double-counted).
+              `semantic_fleetopt` additionally gives the small pool
+              FleetOpt overflow headroom (serve at gamma * B_short);
+              `moe_semantic` binds the large rung to the MoE.
 
 The router is what determines which segment of the logistic P(b) curve each
 engine occupies — the mechanism behind the fleet-level 2.5x (paper §4.2).
@@ -29,13 +47,32 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.core.routing import ESCALATION_DETECT_TOKENS
+
 from .engine import PoolEngine
 from .request import Request
+
+# kinds whose [small, large] rungs serve different models and whose
+# classifier can misroute (the SemanticRouter layer)
+SEMANTIC_KINDS = ("semantic", "semantic_fleetopt", "moe_semantic")
+
+_HASH_A = 2654435761          # Knuth multiplicative hash (mod 2^32)
+
+
+def _misroute_u(rid: int, seed: int) -> float:
+    """Deterministic per-request uniform in [0, 1) for the misroute draw —
+    a pure function of (rid, seed) so routing is order-independent and a
+    misroute-rate sweep flips a *nested* set of requests (rate 0.1 misroutes
+    a superset of rate 0.05), which is what makes the degradation sweep
+    monotone rather than resampled noise."""
+    return ((rid * _HASH_A + seed * 0x9E3779B9) % (1 << 32)) / float(1 << 32)
 
 
 @dataclasses.dataclass
 class RouterPolicy:
-    kind: str    # homo | two_pool | fleetopt | multipool | disagg[_fleetopt]
+    # homo | two_pool | fleetopt | multipool | disagg[_fleetopt] |
+    # moe_pool | semantic | semantic_fleetopt | moe_semantic
+    kind: str
     b_short: int = 4096
     gamma: float = 2.0
     p99_output: int = 1024     # conservative two_pool admission margin
@@ -43,17 +80,31 @@ class RouterPolicy:
     # Required for kind="multipool" and the disagg kinds (where it spans
     # the prefill roles); ignored (derived) for the named §4 topologies.
     ladder: Optional[List[Tuple[str, float]]] = None
+    # semantic kinds: classifier error rate, detection latency (decode
+    # tokens the small model emits before a misroute escalates — the
+    # constant shared with the analytical core.routing.Semantic so both
+    # layers price the same latency) and the seed of the deterministic
+    # per-request misroute draw
+    misroute_rate: float = 0.0
+    detect_tokens: int = ESCALATION_DETECT_TOKENS
+    misroute_seed: int = 0
+
+    @property
+    def is_semantic(self) -> bool:
+        return self.kind in SEMANTIC_KINDS
 
     def admission_ladder(self, roles: Sequence[str]
                          ) -> List[Tuple[str, float]]:
         """Ordered (role, boundary) pairs; route to the first role whose
         boundary >= the request's routing metric."""
-        if self.kind == "homo":
+        if self.kind in ("homo", "moe_pool"):
             return [(roles[0], math.inf)]
         if self.kind == "two_pool":
             return [("short", float(self.b_short)), ("long", math.inf)]
         if self.kind == "fleetopt":
             return [("short", self.gamma * self.b_short), ("long", math.inf)]
+        if self.is_semantic:
+            return [("small", float(self.b_short)), ("large", math.inf)]
         if self.kind in ("multipool", "disagg", "disagg_fleetopt"):
             if not self.ladder:
                 raise ValueError(f"{self.kind} policy needs an explicit"
@@ -89,9 +140,27 @@ class ContextRouter:
         m = self.policy.metric(req)
         for name, boundary in ladder:
             if m <= boundary:
+                name = self._semantic_flip(req, name)
                 self.pools[name].submit(req)
                 return name
         raise AssertionError(f"no ladder entry admits metric {m}: {ladder}")
+
+    def _semantic_flip(self, req: Request, nominal: str) -> str:
+        """SemanticRouter error channel: flip the classifier's decision
+        with probability `misroute_rate` (deterministic per request).  A
+        true-large request flipped into the small-model pool is tagged for
+        escalation after `detect_tokens` of decode; a true-short flipped
+        large just rides the big model."""
+        pol = self.policy
+        if not (pol.is_semantic and pol.misroute_rate > 0.0):
+            return nominal
+        if _misroute_u(req.rid, pol.misroute_seed) >= pol.misroute_rate:
+            return nominal
+        req.misrouted = True
+        if nominal == "large":
+            req.escalate_at = pol.detect_tokens
+            return "small"
+        return "large"
 
     def run(self, requests: List[Request], *, max_iters: int = 100_000
             ) -> Dict[str, dict]:

@@ -125,8 +125,9 @@ def test_charge_handoff_prorates_measurement_window():
 # --- router / topology wiring -------------------------------------------
 
 def test_disagg_topology_routes_into_prefill_pools():
-    policy, plan = build_topology("disagg_fleetopt", AZURE, H100_LLAMA70B,
-                                  LLAMA31_70B, b_short=4096, gamma=2.0)
+    policy, plan, _registry = build_topology(
+        "disagg_fleetopt", AZURE, H100_LLAMA70B, LLAMA31_70B,
+        b_short=4096, gamma=2.0)
     roles = [p.name for p in sorted(plan.pools, key=lambda p: p.window)]
     assert roles == ["prefill-8K", "decode-8K", "prefill-64K", "decode-64K"]
     ladder = policy.admission_ladder(roles)
@@ -143,8 +144,9 @@ def test_disagg_overflow_reprefills_in_long_slice():
     """disagg_fleetopt overflow chain: a mispredicted request evicted from
     decode-8K re-prefills in prefill-64K (its KV was dropped) and finishes
     in decode-64K — two KV handoffs, one migration."""
-    policy, plan = build_topology("disagg_fleetopt", AZURE, H100_LLAMA70B,
-                                  LLAMA31_70B, b_short=4096, gamma=2.0)
+    policy, plan, _registry = build_topology(
+        "disagg_fleetopt", AZURE, H100_LLAMA70B, LLAMA31_70B,
+        b_short=4096, gamma=2.0)
     sim = FleetSim(policy, plan, model=LLAMA31_70B)
     chain = _req(0, 900, 8000, pred=100)    # predicted 1000 -> short slice
     rep = sim.run([chain])

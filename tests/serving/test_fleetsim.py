@@ -149,7 +149,7 @@ def test_multipool_migration_chain_short_mid_long():
     """K = 3 ladder: a request whose actual total outgrows both the 2K and
     the 8K windows must migrate twice (pool-2K -> pool-8K -> pool-64K) and
     still complete in full."""
-    policy, plan = build_topology("multipool", AGENT, H100_LLAMA70B,
+    policy, plan, _registry = build_topology("multipool", AGENT, H100_LLAMA70B,
                                   LLAMA31_70B, gamma=2.0,
                                   windows=[2048, 8192, 65536])
     assert [p.name for p in sorted(plan.pools, key=lambda p: p.window)] \
@@ -220,7 +220,7 @@ def test_router_report_honors_measurement_window():
 def test_router_and_fleetsim_agree_on_measured_tokens():
     """The two report paths count the same steady-state window — they can
     no longer disagree on identical runs (the PR-1 defect)."""
-    policy, plan = build_topology("fleetopt", AZURE, H100_LLAMA70B,
+    policy, plan, _registry = build_topology("fleetopt", AZURE, H100_LLAMA70B,
                                   LLAMA31_70B, b_short=4096)
     sim = FleetSim(policy, plan, model=LLAMA31_70B)
     rep = sim.run(trace_requests(AZURE, 600, seed=2))
