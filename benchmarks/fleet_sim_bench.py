@@ -45,11 +45,23 @@ Table D cell is SLO-compliant after size_to_slo.
 benchmarks/results/fleet_sim.json, which is regenerated with
 `--quick --json benchmarks/results/fleet_sim.json`).
 
+`--time [PATH]` additionally records per-table and total wall-clock (plus
+simulated-seconds-per-wall-second throughput) as
+{table, config, wall_s, sim_s_per_wall_s} rows — the repo's perf
+trajectory.  Default PATH is benchmarks/results/BENCH_fleet_sim.json (the
+committed baseline `perf_diff.py --wall-budget` gates against); CI passes
+an explicit scratch path so the baseline is never clobbered in place.
+
 Standalone:  PYTHONPATH=src python benchmarks/fleet_sim_bench.py
              [--n-requests N] [--slo-requests N] [--quick] [--json PATH]
+             [--time [PATH]]
 Harness:     PYTHONPATH=src python -m benchmarks.run --only fleet_sim
 """
+import json
+import pathlib
+import platform
 import sys
+import time
 
 from repro.core import ladder_windows, size_to_slo
 from repro.core.hardware import H100
@@ -59,7 +71,10 @@ from repro.core.power import H100_POWER
 from repro.core.profiles import (B200_LLAMA70B_FLEET, H100_LLAMA70B,
                                  H200_LLAMA70B)
 from repro.core.workloads import AGENT, AZURE, LMSYS
-from repro.serving import simulate_topology
+from repro.serving import FleetSim, simulate_topology
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent / "results" \
+    / "BENCH_fleet_sim.json"
 
 # per-workload split boundary (paper: Azure 4K, LMSYS 1.5K, Agent 8K)
 B_SHORT = {"azure-conv": 4096, "lmsys-chat": 1536, "agent-heavy": 8192}
@@ -146,8 +161,40 @@ def _slo_cell(kind: str, profile, *, n_requests: int, seed: int):
                        n_requests=n_requests, seed=seed, **kw)
 
 
+class _TableTimer:
+    """Per-table wall-clock + simulated-seconds throughput recorder —
+    the bench's perf-trajectory rows ({table, config, wall_s,
+    sim_s_per_wall_s})."""
+
+    def __init__(self, config: dict):
+        self.config = config
+        self.rows = []
+        self._t0 = time.perf_counter()
+        self._wall0 = self._t0
+        self._sim0 = FleetSim.sim_seconds_total
+        self._simstart = self._sim0
+
+    def lap(self, table: str) -> None:
+        now, sim = time.perf_counter(), FleetSim.sim_seconds_total
+        wall = now - self._t0
+        self.rows.append(dict(
+            table=table, config=self.config, wall_s=round(wall, 3),
+            sim_s_per_wall_s=round((sim - self._sim0) / wall, 1)
+            if wall > 0 else 0.0))
+        self._t0, self._sim0 = now, sim
+
+    def total(self) -> None:
+        wall = time.perf_counter() - self._wall0
+        sim = FleetSim.sim_seconds_total - self._simstart
+        self.rows.append(dict(
+            table="total", config=self.config, wall_s=round(wall, 3),
+            sim_s_per_wall_s=round(sim / wall, 1) if wall > 0 else 0.0))
+
+
 def run(n_requests: int = 10_000, slo_requests: int = 3000, seed: int = 0,
         quick: bool = False):
+    timer = _TableTimer(dict(quick=quick, n_requests=n_requests,
+                             slo_requests=slo_requests, seed=seed))
     rows = []
     for wl in (AZURE, LMSYS, AGENT):
         for kind in TOPOLOGIES:
@@ -161,12 +208,14 @@ def run(n_requests: int = 10_000, slo_requests: int = 3000, seed: int = 0,
                                         if r != "fleet"},
                              prefill_energy_frac=f["prefill_energy_frac"],
                              tokens_per_s=f["tokens_per_s"]))
+    timer.lap("unconstrained")
     slo = {}
     for gen, prof in GENERATIONS:
         for kind in SLO_TOPOLOGIES:
             res = _slo_cell(kind, prof, n_requests=slo_requests, seed=seed)
             slo[(gen, kind)] = res
             rows.append(dict(res.row(), table="slo", generation=gen))
+    timer.lap("slo")
     # Table C: disaggregation on Azure/H100 (homo/fleetopt cells reuse
     # Table A measured + Table B SLO numbers; only the disagg kinds add
     # simulation + SLO-loop work)
@@ -194,10 +243,12 @@ def run(n_requests: int = 10_000, slo_requests: int = 3000, seed: int = 0,
             slo_ttft_p99_s=round(res.ttft_p99_s, 3),
             slo_added=res.instances_added,
             slo_compliant=res.compliant))
+    timer.lap("disagg")
     # Table D: model heterogeneity (Azure always; Agent in the full run)
     rows += table_d((AZURE,) if quick else (AZURE, AGENT),
                     n_requests=n_requests, slo_requests=slo_requests,
                     seed=seed)
+    timer.lap("model_hetero")
     az = {r["topology"]: r["simulated"] for r in rows
           if r.get("workload") == "azure-conv"
           and r["table"] == "unconstrained"}
@@ -224,12 +275,43 @@ def run(n_requests: int = 10_000, slo_requests: int = 3000, seed: int = 0,
                + f"; measured semantic/homo = {sem_adv:.2f}x"
                + "; measured MoE/homo at dispatch "
                + ", ".join(f"{d:g}ms {v:.2f}x" for d, v in moe_adv.items()))
+    timer.total()
+    return rows, derived, timer.rows
+
+
+def write_bench_json(timings, path=BENCH_JSON) -> None:
+    """Persist the perf-trajectory rows ({table, config, wall_s,
+    sim_s_per_wall_s}) with enough host metadata to judge whether a
+    wall-clock delta is a code change or a runner-class change."""
+    pathlib.Path(path).parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "w") as fh:
+        json.dump({"meta": dict(python=platform.python_version(),
+                                machine=platform.machine(),
+                                system=platform.system()),
+                   "timings": timings}, fh, indent=1)
+
+
+def harness_run():
+    """benchmarks.run entry point: (rows, derived) like every suite, with
+    the timing rows persisted as a side effect — the full-run perf
+    trajectory.  Written next to (never over) the committed quick-config
+    baseline BENCH_fleet_sim.json, which only a deliberate
+    `--quick --time` refresh may move: the CI wall-budget gate compares
+    quick against quick."""
+    rows, derived, timings = run()
+    write_bench_json(timings, BENCH_JSON.with_name("BENCH_fleet_sim_full"
+                                                   ".json"))
     return rows, derived
+
+
+# redirect benchmarks.run's generic rows dump away from the committed
+# --quick CI baseline results/fleet_sim.json (full-config rows are not
+# comparable cell-for-cell with the quick gate's)
+harness_run.dump_name = "fleet_sim_full"
 
 
 def main(argv=None) -> None:
     import argparse
-    import json
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--n-requests", type=int, default=10_000)
     ap.add_argument("--slo-requests", type=int, default=3000)
@@ -239,16 +321,27 @@ def main(argv=None) -> None:
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="dump {'meta', 'rows'} JSON (the CI perf-"
                          "regression baseline/current format)")
+    ap.add_argument("--time", metavar="PATH", nargs="?", default=None,
+                    const=str(BENCH_JSON),
+                    help="record per-table + total wall-clock to PATH "
+                         f"(default {BENCH_JSON}; gated in CI by "
+                         "perf_diff.py --wall-budget)")
     args = ap.parse_args(argv)
     n = 1000 if args.quick else args.n_requests
     n_slo = 1500 if args.quick else args.slo_requests
-    rows, derived = run(n_requests=n, slo_requests=n_slo, seed=args.seed,
-                        quick=args.quick)
+    rows, derived, timings = run(n_requests=n, slo_requests=n_slo,
+                                 seed=args.seed, quick=args.quick)
     if args.json:
         with open(args.json, "w") as fh:
             json.dump({"meta": dict(n_requests=n, slo_requests=n_slo,
                                     seed=args.seed, quick=args.quick),
                        "rows": rows}, fh, indent=1)
+    if args.time:
+        write_bench_json(timings, args.time)
+        print("=== wall-clock (s) ===")
+        for t in timings:
+            print(f"{t['table']:14s} {t['wall_s']:8.2f}"
+                  f"  ({t['sim_s_per_wall_s']:.0f} sim-s/wall-s)")
 
     print("=== Table A: unconstrained (H100) ===")
     hdr = (f"{'workload':12s} {'topology':9s} {'analytic':>8s} {'simulated':>9s}"

@@ -28,6 +28,26 @@ Two modes:
    and are empty for every other row; its metric is the row's primary
    tok/W field (`simulated` for measured tables, `slo_feasible` for SLO
    tables; both when a row carries both).
+
+3. Wall-clock budget gate (CI, alongside --fleet): diff the bench's
+   timing dump (`fleet_sim_bench.py --time`, rows of
+   {table, config, wall_s, sim_s_per_wall_s}) against the committed
+   benchmarks/results/BENCH_fleet_sim.json and fail when the current
+   *total* wall-clock exceeds `--wall-budget` times the baseline —
+   a PR that slows the --quick bench by more than the budget factor
+   fails even if every tok/W cell is unchanged.  The default 1.5x
+   headroom absorbs runner-class variance between the machine that
+   recorded the baseline and the CI runner; the perf job uploads its
+   `bench_wall_current.json` as an artifact precisely so the committed
+   baseline can be refreshed *from the CI runner class* (download the
+   artifact from a green run and commit it as BENCH_fleet_sim.json).
+   Regenerate deliberately — never to paper over a slowdown.
+
+     PYTHONPATH=src python -m benchmarks.perf_diff --fleet \
+         benchmarks/results/fleet_sim.json current.json \
+         --wall-budget 1.5 \
+         --bench-baseline benchmarks/results/BENCH_fleet_sim.json \
+         --bench-current bench_current.json
 """
 import argparse
 import json
@@ -97,12 +117,60 @@ def fleet_diff(base_path: str, cur_path: str,
                 ok=not (out_of_tol or missing))
 
 
+def _bench_rows(path: str) -> list:
+    with open(path) as fh:
+        data = json.load(fh)
+    return data["timings"] if isinstance(data, dict) else data
+
+
+def _total_wall(rows: list) -> float:
+    totals = [r["wall_s"] for r in rows if r.get("table") == "total"]
+    if not totals:       # no explicit total row: sum the tables
+        totals = [sum(r["wall_s"] for r in rows)]
+    return float(totals[-1])
+
+
+def wall_budget_diff(base_path: str, cur_path: str,
+                     budget: float) -> dict:
+    b_rows, c_rows = _bench_rows(base_path), _bench_rows(cur_path)
+    # wall seconds are only comparable under the same bench config (a
+    # full-run dump vs the quick baseline would silently disable — or
+    # permanently trip — the gate); every timing row carries it
+    b_cfg = next((r.get("config") for r in b_rows), None)
+    c_cfg = next((r.get("config") for r in c_rows), None)
+    if b_cfg != c_cfg:
+        return dict(budget=budget, config_mismatch=True,
+                    baseline_config=b_cfg, current_config=c_cfg,
+                    ok=False)
+    b_by = {r["table"]: r["wall_s"] for r in b_rows}
+    c_by = {r["table"]: r["wall_s"] for r in c_rows}
+    tables = [dict(table=t, baseline_s=b_by[t],
+                   current_s=c_by.get(t),
+                   ratio=round(c_by[t] / b_by[t], 3)
+                   if c_by.get(t) and b_by[t] else None)
+              for t in b_by]
+    b_tot, c_tot = _total_wall(b_rows), _total_wall(c_rows)
+    ratio = c_tot / b_tot if b_tot else float("inf")
+    return dict(budget=budget, baseline_total_s=b_tot,
+                current_total_s=round(c_tot, 3),
+                ratio=round(ratio, 3), tables=tables,
+                ok=ratio <= budget)
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--fleet", action="store_true",
                     help="fleet tok/W regression mode")
     ap.add_argument("--tolerance", type=float, default=10.0,
                     help="max abs tok/W drift per cell, percent")
+    ap.add_argument("--wall-budget", type=float, default=None,
+                    metavar="RATIO",
+                    help="max current/baseline total wall-clock ratio "
+                         "(needs --bench-baseline/--bench-current)")
+    ap.add_argument("--bench-baseline", default=None,
+                    help="committed BENCH_fleet_sim.json timing baseline")
+    ap.add_argument("--bench-current", default=None,
+                    help="freshly recorded timing dump (--time)")
     ap.add_argument("baseline")
     ap.add_argument("current")
     args = ap.parse_args(argv)
@@ -112,7 +180,27 @@ def main(argv=None) -> None:
     rep = fleet_diff(args.baseline, args.current,
                      tolerance_pct=args.tolerance)
     print(json.dumps(rep, indent=2))
-    if not rep["ok"]:
+    wall_fail = None
+    if args.wall_budget is not None:
+        if not (args.bench_baseline and args.bench_current):
+            sys.exit("--wall-budget needs --bench-baseline and"
+                     " --bench-current")
+        wrep = wall_budget_diff(args.bench_baseline, args.bench_current,
+                                args.wall_budget)
+        print(json.dumps(wrep, indent=2))
+        if wrep.get("config_mismatch"):
+            wall_fail = (f"WALL-BUDGET CONFIG MISMATCH: baseline recorded"
+                         f" under {wrep['baseline_config']} but current"
+                         f" under {wrep['current_config']} — wall seconds"
+                         f" are not comparable across bench configs")
+        elif not wrep["ok"]:
+            wall_fail = (f"WALL-CLOCK REGRESSION: --quick bench "
+                         f"{wrep['current_total_s']:.1f}s vs baseline "
+                         f"{wrep['baseline_total_s']:.1f}s "
+                         f"({wrep['ratio']:.2f}x > budget "
+                         f"{args.wall_budget:g}x); regenerate the "
+                         f"baseline only for a deliberate slowdown")
+    if not rep["ok"] or wall_fail:
         regressed = [c for c in rep["out_of_tolerance"]
                      if c["delta_pct"] < 0]
         improved = [c for c in rep["out_of_tolerance"]
@@ -131,6 +219,8 @@ def main(argv=None) -> None:
         if rep["missing_in_current"]:
             msgs.append("cells missing from current run: "
                         + ", ".join(rep["missing_in_current"]))
+        if wall_fail:
+            msgs.append(wall_fail)
         sys.exit("; ".join(msgs))
 
 

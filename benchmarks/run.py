@@ -20,7 +20,12 @@ def _suites():
                    table4_semantic_routing, table5_gpu_generations,
                    table6_archetypes, table7_power_params)
     return {
-        "fleet_sim": fleet_sim_bench.run,
+        # harness_run also records the full-run wall-clock trajectory to
+        # results/BENCH_fleet_sim_full.json (the committed quick-config
+        # baselines fleet_sim.json / BENCH_fleet_sim.json are refreshed
+        # only by a deliberate `fleet_sim_bench.py --quick --json ...
+        # --time`; see dump_name below)
+        "fleet_sim": fleet_sim_bench.harness_run,
         "table1_context_law": table1_context_law.run,
         "table2_model_archs": table2_model_archs.run,
         "table3_fleet_topology": table3_fleet_topology.run,
@@ -62,7 +67,11 @@ def main() -> None:
             print(f"{name},ERROR,{type(e).__name__}: {e}")
             continue
         us = (time.perf_counter() - t0) * 1e6
-        (RESULTS / f"{name}.json").write_text(json.dumps(rows, indent=1))
+        # suites may redirect their generic rows dump (fleet_sim: the
+        # harness runs the *full* config, which must never overwrite the
+        # committed --quick CI perf-regression baseline fleet_sim.json)
+        dump = getattr(fn, "dump_name", name)
+        (RESULTS / f"{dump}.json").write_text(json.dumps(rows, indent=1))
         # kernel/engine suites carry their own per-call timings
         if rows and isinstance(rows[0], dict) and "us_per_call" in rows[0]:
             for r in rows:

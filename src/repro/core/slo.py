@@ -21,6 +21,19 @@ never loosened — the loop only ever *adds* instances, so it terminates
 (each violating pool grows every round) and the resulting tok/W cost is
 monotone in the number of rounds.  See DESIGN.md §5/§6.
 
+Measurement cost structure (DESIGN.md §10): every round replays one
+**frozen** arrival trace (common random numbers — sampled once, so rounds
+differ only in capacity and round-to-round variance is structurally
+zero), `measure()` is memoized on the override signature (an exact repeat
+of a configuration — e.g. a trim-bisection probe landing on an
+already-measured count — costs nothing), and between rounds only pools
+whose provisioning actually changed are re-simulated: unchanged pools
+replay their prior round's `PoolSummary` snapshot through
+`FleetSim.run(reuse=...)` (cross-pool flow only points forward, so an
+unchanged topological prefix is exact, not approximate).
+`SLOSizingResult.sim_stats` records the audit: full-fleet simulations
+vs measure calls vs pools replayed.
+
 The loop works for every router topology FleetSim can serve: homo,
 two_pool, fleetopt, K >= 3 multipool ladders and the prefill/decode
 disaggregated kinds (paper §10.3).  For disaggregated fleets the prefill
@@ -49,6 +62,16 @@ from .workloads import Workload
 _MIN_STEP = 1.15
 _MAX_STEP = 1.5
 _MIN_MFU = 0.02
+
+
+def _max_hol() -> float:
+    """Measured HOL-inflation calibration ceiling: never push the knob
+    past the analytically calibrated plain-two-pool value — beyond it
+    the queueing signal is double-counted with the instance ratchet,
+    which grows capacity through min_instances in the same round.
+    (Imported lazily: core.routing itself builds on core.fleet.)"""
+    from .routing import HOL_INFLATION
+    return HOL_INFLATION
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,6 +128,13 @@ class SLOSizingResult:
     # `rounds` stays the monotone grow-only audit trail.
     trimmed: Dict[str, int] = dataclasses.field(default_factory=dict)
     trim_rounds: int = 0
+    # measurement-cost audit (DESIGN.md §10): how many measure() calls the
+    # sizing took, how many were full-fleet simulations vs memo hits, and
+    # how many per-pool simulations the warm-start replay avoided
+    sim_stats: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # measured HOL calibration: per-role occupancy-inflation factor the
+    # loop fed back into the closed-form sizing (PoolOverride.hol_inflation)
+    measured_hol: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def ttft_p99_s(self) -> float:
@@ -162,6 +192,114 @@ class SLOSizingResult:
                     compliant=self.compliant)
 
 
+class _FleetMeasurer:
+    """Incremental provision-and-measure harness for the SLO loop.
+
+    Three cost levers on top of the SoA fleet simulator:
+
+      frozen trace  — the arrival trace is sampled exactly once (common
+                      random numbers): rounds differ only in capacity,
+                      and the trim bisection compares like with like.
+      memoization   — `measure()` results are keyed by the override
+                      signature (every per-role knob, by value), so an
+                      exact configuration is never simulated twice.
+      warm start    — consecutive measurements share the per-pool
+                      `PoolSummary` snapshots: pools whose provisioning
+                      (instance count — the only override-movable input
+                      the simulator sees) is unchanged over an unchanged
+                      topological prefix are replayed from their prior
+                      steady state via `FleetSim.run(reuse=...)` instead
+                      of re-simulated.
+
+    `stats` carries the audit counts `size_to_slo` exposes as
+    `SLOSizingResult.sim_stats`.
+    """
+
+    def __init__(self, kind: str, workload: Workload, profile: BaseProfile,
+                 model: ModelSpec, *, b_short: int, gamma: float,
+                 windows: Optional[Sequence[int]], long_window: int,
+                 n_requests: int, seed: int, prefill_chunk: int,
+                 small_model: Optional[ModelSpec],
+                 small_profile: Optional[BaseProfile],
+                 misroute_rate: float, dispatch_ms: float):
+        # serving imports are lazy: core stays importable without the
+        # serving layer, and the serving layer itself imports core.fleet
+        from repro.serving import fleetsim as _fs
+        from repro.serving.request import sample_trace
+        self._fs = _fs
+        self.kind, self.workload = kind, workload
+        self.profile, self.model = profile, model
+        self.b_short, self.gamma = b_short, gamma
+        self.windows, self.long_window = windows, long_window
+        self.n_requests, self.seed = n_requests, seed
+        self.prefill_chunk = prefill_chunk
+        self.small_model, self.small_profile = small_model, small_profile
+        self.misroute_rate, self.dispatch_ms = misroute_rate, dispatch_ms
+        # common random numbers: ONE frozen trace for every round/trial
+        self._trace = sample_trace(workload, n_requests, seed=seed,
+                                   max_total=long_window)
+        self._memo: Dict[tuple, tuple] = {}
+        self._prev: Optional[tuple] = None   # (roles, sigs, summaries)
+        self.stats = dict(measure_calls=0, memo_hits=0, full_fleet_sims=0,
+                          pool_sims=0, pools_reused=0)
+
+    def _requests(self):
+        # fresh mutable Request objects over the frozen trace, built by
+        # the one shared construction path (serving.fleetsim) so the SLO
+        # loop can never diverge from simulate_topology's conventions
+        return self._fs.trace_requests(self.workload, self.n_requests,
+                                       trace=self._trace)
+
+    @staticmethod
+    def _sig(overrides: Dict[str, PoolOverride]) -> tuple:
+        return tuple(sorted(
+            (role, (o.prefill_mfu, o.hol_inflation, o.min_instances,
+                    o.extra_instances, o.max_instances))
+            for role, o in overrides.items()))
+
+    def measure(self, overrides: Dict[str, PoolOverride]):
+        """Provision with `overrides`, measure end-to-end; returns
+        (policy, plan, sim, report)."""
+        self.stats["measure_calls"] += 1
+        key = self._sig(overrides)
+        if key in self._memo:
+            self.stats["memo_hits"] += 1
+            return self._memo[key]
+        policy, plan, registry = self._fs.build_topology(
+            self.kind, self.workload, self.profile, self.model,
+            b_short=self.b_short, gamma=self.gamma,
+            long_window=self.long_window, windows=self.windows,
+            pool_overrides=overrides or None, small_model=self.small_model,
+            small_profile=self.small_profile,
+            misroute_rate=self.misroute_rate, dispatch_ms=self.dispatch_ms,
+            misroute_seed=self.seed)
+        sim = self._fs.FleetSim(policy, plan, registry=registry,
+                                prefill_chunk=self.prefill_chunk,
+                                rng_seed=self.seed)
+        roles = self._fs.topology_roles(self.kind, plan)
+        # the only sim-relevant quantity a PoolOverride can move is the
+        # instance count (the recalibrated MFU/HOL change the *bounds*,
+        # not the engines) — so an unchanged count over an unchanged
+        # topological prefix means an identical pool simulation
+        sigs = [max(p.instances, 1)
+                for p in sorted(plan.pools, key=lambda p: p.window)]
+        reuse = {}
+        if self._prev is not None and self._prev[0] == roles:
+            for role, new_sig, old_sig in zip(roles, sigs, self._prev[1]):
+                if new_sig != old_sig:
+                    break
+                reuse[role] = self._prev[2][role]
+        report = sim.run(self._requests(), reuse=reuse or None)
+        self.stats["pool_sims"] += len(sim.fresh_roles)
+        self.stats["pools_reused"] += len(roles) - len(sim.fresh_roles)
+        if not reuse:
+            self.stats["full_fleet_sims"] += 1
+        self._prev = (roles, sigs, dict(sim.summaries))
+        out = (policy, plan, sim, report)
+        self._memo[key] = out
+        return out
+
+
 def size_to_slo(kind: str, workload: Workload, profile: BaseProfile,
                 model: ModelSpec, *, b_short: int = 4096,
                 gamma: float = 2.0,
@@ -204,30 +342,22 @@ def size_to_slo(kind: str, workload: Workload, profile: BaseProfile,
     trials never enter `rounds` (which stays the monotone grow-only audit
     trail).
     """
-    # serving imports are lazy: core stays importable without the serving
-    # layer, and the serving layer itself imports core.fleet
-    from repro.serving.fleetsim import (FleetSim, build_topology,
-                                        topology_roles, trace_requests)
+    import numpy as np
+
     from repro.core.routing import LONG_WINDOW
+    from repro.serving.fleetsim import topology_roles
 
     if long_window is None:
         long_window = int(max(windows)) if (kind == "multipool" and windows) \
             else LONG_WINDOW
 
-    def measure(ovr: Dict[str, PoolOverride]):
-        """Provision with `ovr` and run the fixed-seed trace end-to-end."""
-        policy, plan, registry = build_topology(
-            kind, workload, profile, model, b_short=b_short, gamma=gamma,
-            long_window=long_window, windows=windows,
-            pool_overrides=ovr or None, small_model=small_model,
-            small_profile=small_profile, misroute_rate=misroute_rate,
-            dispatch_ms=dispatch_ms, misroute_seed=seed)
-        sim = FleetSim(policy, plan, registry=registry,
-                       prefill_chunk=prefill_chunk, rng_seed=seed)
-        reqs = trace_requests(workload, n_requests, seed=seed,
-                              max_total=long_window)
-        report = sim.run(reqs)
-        return policy, plan, sim, report
+    measurer = _FleetMeasurer(
+        kind, workload, profile, model, b_short=b_short, gamma=gamma,
+        windows=windows, long_window=long_window, n_requests=n_requests,
+        seed=seed, prefill_chunk=prefill_chunk, small_model=small_model,
+        small_profile=small_profile, misroute_rate=misroute_rate,
+        dispatch_ms=dispatch_ms)
+    measure = measurer.measure
 
     def meets(report: Dict[str, dict]) -> bool:
         f = report["fleet"]
@@ -239,6 +369,7 @@ def size_to_slo(kind: str, workload: Workload, profile: BaseProfile,
 
     overrides: Dict[str, PoolOverride] = {}
     rounds: List[SLORound] = []
+    measured_hol: Dict[str, float] = {}
     unconstrained: Optional[FleetReport] = None
     base_mfu: Dict[str, float] = {}
     policy = plan = report = sim = None
@@ -272,30 +403,36 @@ def size_to_slo(kind: str, workload: Workload, profile: BaseProfile,
         # prefill (in a disagg fleet that is the prefill pool: decode
         # capacity cannot buy TTFT there); a TPOT or e2e violation (when
         # the SLO constrains them) to the pool that decoded the request.
-        violators = {role: 0 for role in sim.order}
-        observations = {role: 0 for role in sim.order}
-        for role in sim.order:
-            for r in sim.groups[role].completed:
-                ttft_role = r.prefill_role \
-                    if r.prefill_role in violators else role
-                observations[ttft_role] += 1
-                if r.first_token_time - r.arrival_time > slo.ttft_p99_s:
-                    violators[ttft_role] += 1
-                if slo.tpot_p99_ms is not None and r.n_generated > 1:
-                    observations[role] += 1
-                    tpot_ms = 1e3 * (r.finish_time - r.first_token_time) \
-                        / (r.n_generated - 1)
-                    if tpot_ms > slo.tpot_p99_ms:
-                        violators[role] += 1
-                if slo.e2e_p99_s is not None and r.finish_time >= 0:
-                    observations[role] += 1
-                    if r.finish_time - r.arrival_time > slo.e2e_p99_s:
-                        violators[role] += 1
+        # Counted by array reduction over the cached pool summaries — the
+        # summaries carry per-completed-request metric columns, so reused
+        # (warm-started) pools attribute without any Request objects.
+        n_roles = len(sim.order)
+        viol = np.zeros(n_roles, np.int64)
+        obs = np.zeros(n_roles, np.int64)
+        for k, role in enumerate(sim.order):
+            s = sim.summaries[role]
+            obs += np.bincount(s.ttft_role, minlength=n_roles)
+            late = (s.first_token - s.arrival) > slo.ttft_p99_s
+            viol += np.bincount(s.ttft_role[late], minlength=n_roles)
+            if slo.tpot_p99_ms is not None:
+                m = s.n_generated > 1
+                obs[k] += int(m.sum())
+                tpot_ms = 1e3 * (s.finish[m] - s.first_token[m]) \
+                    / (s.n_generated[m] - 1)
+                viol[k] += int((tpot_ms > slo.tpot_p99_ms).sum())
+            if slo.e2e_p99_s is not None:
+                m = s.finish >= 0
+                obs[k] += int(m.sum())
+                viol[k] += int(((s.finish[m] - s.arrival[m])
+                                > slo.e2e_p99_s).sum())
+        violators = {role: int(viol[k]) for k, role in enumerate(sim.order)}
+        observations = {role: int(obs[k])
+                        for k, role in enumerate(sim.order)}
         n_obs = max(sum(observations.values()), 1)
         budget = int(0.01 * n_obs)
         rounds.append(SLORound(
             round=round_i,
-            instances={role: len(sim.groups[role].engines)
+            instances={role: sim.groups[role].instances
                        for role in sim.order},
             ttft_p99_s=fleet_p99, tpot_p99_ms=fleet_tpot,
             e2e_p99_s=fleet_e2e,
@@ -333,6 +470,8 @@ def size_to_slo(kind: str, workload: Workload, profile: BaseProfile,
             overshoot = max(overshoot, fleet_e2e / slo.e2e_p99_s)
         step = min(max(overshoot, _MIN_STEP), _MAX_STEP)
         roles = topology_roles(kind, plan)
+        pools_by_role = dict(zip(roles, sorted(plan.pools,
+                                               key=lambda p: p.window)))
         for role in violating:
             if role not in roles:    # defensive: role vanished from plan
                 continue
@@ -341,11 +480,33 @@ def size_to_slo(kind: str, workload: Workload, profile: BaseProfile,
                 role, PoolOverride(prefill_mfu=start_mfu))
             o.prefill_mfu = max((o.prefill_mfu or start_mfu) / step,
                                 _MIN_MFU)
+            # hol_inflation recalibration (ROADMAP gap): the simulator
+            # measures each pool's head-of-line queueing directly — the
+            # steady-state-windowed mean occupied-slot population
+            # (m_slot_seconds / window span, ramp-in and drain excluded
+            # like every m_* meter counter) vs the closed form's
+            # Little's-law in-flight population at the hol = 1 baseline.
+            # Feeding the measured inflation back through PoolOverride
+            # raises the closed-form decode/prefill bounds for congested
+            # pools instead of leaving the knob at the analytical
+            # default (capped at the calibrated two-pool ceiling;
+            # decode-phase pools only — a prefill-phase pool's occupancy
+            # is chunk-queue depth, not a decode population).
+            pool = pools_by_role[role]
+            s = sim.summaries[role]
+            if pool.phase != "prefill" and pool.n_inflight > 0:
+                n_meas = s.m_slot_seconds / s.measure_span
+                hol1 = pool.n_inflight / pool.hol_inflation
+                hol_meas = n_meas / hol1 if hol1 > 0 else 1.0
+                measured_hol[role] = round(hol_meas, 3)
+                if hol_meas > 1.0:
+                    o.hol_inflation = max(o.hol_inflation or 1.0,
+                                          min(hol_meas, _max_hol()))
             # the MFU backoff only bites once the prefill bound binds, so
             # also ratchet the instance floor by the same step (at least
             # one new instance, for guaranteed progress); floor and bound
             # take a max in recalibrate(), they never compound
-            cur = len(sim.groups[role].engines)
+            cur = sim.groups[role].instances
             o.min_instances = max(o.min_instances, cur
                                   + max(int(math.ceil(cur * (step - 1.0))),
                                         1))
@@ -385,4 +546,5 @@ def size_to_slo(kind: str, workload: Workload, profile: BaseProfile,
         kind=kind, workload=workload.name, slo=slo, policy=policy,
         plan=plan, unconstrained=unconstrained, report=report,
         overrides=overrides, rounds=rounds, compliant=compliant,
-        trimmed=trimmed, trim_rounds=trim_rounds)
+        trimmed=trimmed, trim_rounds=trim_rounds,
+        sim_stats=dict(measurer.stats), measured_hol=measured_hol)

@@ -1,14 +1,17 @@
-from .energy import EnergyMeter
+from .energy import EnergyMeter, MeterBank
 from .engine import PoolEngine, scaled_prefill_chunk
-from .fleetsim import (FleetSim, PoolGroup, SimVsAnalytical,
+from .fleetsim import (FleetSim, PoolGroup, PoolSummary, SimVsAnalytical,
                        analytical_decode_tok_per_watt, build_topology,
                        simulate_topology, topology_roles, trace_requests)
 from .models import ModelBinding, ModelProfileRegistry
 from .request import Request, synthetic_requests
 from .router import SEMANTIC_KINDS, ContextRouter, RouterPolicy
+from .soa import BatchedPoolEngine
 
-__all__ = ["EnergyMeter", "PoolEngine", "Request", "synthetic_requests",
+__all__ = ["EnergyMeter", "MeterBank", "PoolEngine", "BatchedPoolEngine",
+           "Request", "synthetic_requests",
            "ContextRouter", "RouterPolicy", "FleetSim", "PoolGroup",
+           "PoolSummary",
            "SimVsAnalytical", "analytical_decode_tok_per_watt",
            "build_topology", "simulate_topology", "topology_roles",
            "trace_requests", "ModelBinding", "ModelProfileRegistry",

@@ -17,11 +17,15 @@ The engine runs in one of two modes:
                     tests/serving/test_serving.py).
   analytical mode — cfg=None: no neural net; token ids come from a
                     deterministic LCG stream and only the *scheduler* and
-                    the EnergyMeter run.  This is what the fleet simulator
-                    (serving/fleetsim.py) instantiates by the dozen: a tick
-                    is a handful of vectorized numpy ops over the slot
-                    arrays, so 16 pools x 256 slots x 10k requests finish
-                    in seconds.
+                    the EnergyMeter run.  The fleet simulator used to
+                    instantiate these by the dozen; it now runs every
+                    instance of a pool inside one `BatchedPoolEngine`
+                    (serving/soa.py), which extends this engine's slot
+                    arrays with an instance axis and replays these exact
+                    semantics bit-for-bit (tests/serving/test_soa_parity).
+                    The scalar engine remains the reference
+                    implementation and the token-level (model-mode)
+                    serving path.
 
 And (orthogonally) serves one of two phases:
 
@@ -66,6 +70,8 @@ from repro.core.profiles import BaseProfile
 from .energy import EnergyMeter
 from .request import Request, latency_percentiles
 
+# Shared with the SoA batched engine (serving.soa), which must generate
+# identical token streams and sentinels for bit-exact parity.
 _LCG_A, _LCG_C = 1664525, 1013904223   # Numerical Recipes LCG
 _NEVER = np.iinfo(np.int32).max        # escalate_at sentinel: no escalation
 

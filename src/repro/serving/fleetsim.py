@@ -2,21 +2,26 @@
 
 The analytical layer (core.fleet / core.routing) *predicts* fleet tok/W from
 closed-form sizing; everything here *measures* it by actually running the
-fleet: N analytical-mode `PoolEngine`s per provisioned pool, fed Poisson
-arrivals drawn from the shared `core.workloads` traces through the same
-`ContextRouter` the token-level engine uses, with chunked-prefill
-interleave, FleetOpt overflow migration (preemption + re-prefill in the
-long pool), and per-iteration `EnergyMeter` charging.  The output is
-measured fleet tok/s, tok/W, TTFT/TPOT percentiles and per-pool occupancy
-that can be put head-to-head against the `core.fleet` prediction — the
-TokenPowerBench-style measurement cross-check of the 1/W law.
+fleet: one structure-of-arrays `BatchedPoolEngine` (serving.soa) per
+provisioned pool — all `instances x n_slots` slots in one set of numpy
+arrays, every instance stepped in lockstep — fed Poisson arrivals drawn
+from the shared `core.workloads` traces through the same `ContextRouter`
+the token-level engine uses, with chunked-prefill interleave, FleetOpt
+overflow migration (preemption + re-prefill in the long pool), and
+per-iteration `MeterBank` charging.  The output is measured fleet tok/s,
+tok/W, TTFT/TPOT percentiles and per-pool occupancy that can be put
+head-to-head against the `core.fleet` prediction — the TokenPowerBench-
+style measurement cross-check of the 1/W law.  (The batched engines
+replay the scalar `PoolEngine` semantics bit-for-bit — DESIGN.md §10.)
 
-Execution model (event-driven, per-engine timelines):
+Execution model (event-driven, per-instance timelines):
 
   * Routing is context-length-based and time-independent, so every request
-    is routed up front; each engine then advances its own clock through its
-    private event sequence (idle-skip to next arrival, decode iterations of
-    tau(n, L), chunked prefill charges).  Engines never need a shared clock
+    is routed up front; each instance then advances its own clock through
+    its private event sequence (idle-skip to next arrival, decode
+    iterations of tau(n, L), chunked prefill charges) — the batched
+    engine carries the diverging clocks as a `MeterBank` row per
+    instance.  Instances never need a shared clock
     — except for cross-pool request flow, which is always *forward* in the
     pool order: overflow migrations flow toward larger windows (pool i ->
     pool i+1 in the admission ladder; FleetOpt's short -> long is the K = 2
@@ -48,9 +53,9 @@ the integration test asserts against `core.fleet`.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import math
-from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -66,29 +71,40 @@ from repro.core.routing import (LONG_WINDOW, FleetOpt, Homogeneous, Semantic,
                                 TwoPool)
 from repro.core.workloads import Workload
 
-from .engine import PoolEngine, scaled_prefill_chunk
+from .engine import scaled_prefill_chunk
 from .models import ModelBinding, ModelProfileRegistry
 from .request import (Request, latency_percentiles as _percentiles,
-                      sample_trace)
+                      latency_percentiles_arrays, sample_trace)
 from .router import SEMANTIC_KINDS, ContextRouter, RouterPolicy
+from .soa import BatchedPoolEngine
 
 
 def trace_requests(workload: Workload, n: int, *, seed: int = 0,
                    max_total: int = LONG_WINDOW,
-                   arrival_rate: Optional[float] = None) -> List[Request]:
+                   arrival_rate: Optional[float] = None,
+                   trace: Optional[List[Tuple[int, int, float]]] = None,
+                   ) -> List[Request]:
     """n requests with (prompt, output) drawn from the workload trace and
     Poisson arrivals.  Prompts are zero-copy broadcast views — analytical
-    engines only read the shape, so a 10k-request trace costs ~nothing."""
+    engines only read the shape, so a 10k-request trace costs ~nothing.
+
+    Pass `trace` (pre-sampled `sample_trace` triples) to materialise
+    fresh Request objects over a *frozen* trace instead of re-sampling —
+    the SLO loop's common-random-numbers path.  This function is the
+    single source of the request-construction convention (zero-broadcast
+    prompts, predicted_output = E[output] honest routing) for every
+    consumer."""
     mean_out = int(round(workload.mean_output))
+    if trace is None:
+        trace = sample_trace(workload, n, seed=seed, max_total=max_total,
+                             arrival_rate=arrival_rate)
     return [Request(
         rid=i, prompt=np.broadcast_to(np.int64(0), (p,)),
         max_new_tokens=o, arrival_time=t,
         # honest routing: the router sees prompt + E[output], never the
         # actual sampled output (core.routing.FleetOpt's assumption)
         predicted_output=mean_out)
-        for i, (p, o, t) in enumerate(
-            sample_trace(workload, n, seed=seed, max_total=max_total,
-                         arrival_rate=arrival_rate))]
+        for i, (p, o, t) in enumerate(trace)]
 
 
 def topology_roles(kind: str, plan: FleetReport) -> List[str]:
@@ -251,37 +267,116 @@ def build_topology(kind: str, workload: Workload, profile: BaseProfile,
     return policy, rep, registry
 
 
-class PoolGroup:
-    """N engine replicas serving one provisioned pool, balanced by least
-    *total assigned* predicted work (prompt + predicted output for decode
-    pools; prompt only for prefill-phase pools, whose work ends at the
-    handoff).  Every request is routed before any engine runs (see the
-    execution model above), so there is no notion of work "draining"
-    between assignments — `_pending` is deliberately a monotone
-    cumulative-assignment counter, which load-balances the whole trace
-    across replicas.  Quacks like a PoolEngine for the router
-    (submit / stats)."""
+@dataclasses.dataclass
+class PoolSummary:
+    """Everything the fleet roll-up, the SLO loop and the cross-pool
+    replay need from one drained pool, computed in a single pass.
 
-    def __init__(self, role: str, engines: List[PoolEngine]):
+    This is both the "single cached summary per measurement window" that
+    deduplicates the old per-field `sum(... for e in self.engines)`
+    aggregation passes in `FleetSim.report` / `PoolGroup.measured_totals`,
+    and the unit of **incremental re-simulation**: `core.slo`'s sizing
+    loop hands a prior round's summaries back to `FleetSim.run(reuse=...)`
+    for every pool whose provisioning did not change, and the pool is
+    replayed from this snapshot — its outbox clones re-injected downstream
+    — instead of being re-simulated."""
+
+    role: str
+    phase: str
+    window: int
+    instances: int
+    n_slots: int
+    # steady-state-windowed occupancy integral + the window span it was
+    # measured over: the SLO HOL calibration derives the pool's mean
+    # occupied-slot population (m_slot_seconds / measure_span) from
+    # these, unrounded and with ramp-in/drain transients excluded —
+    # consistent with every other windowed measurement in the loop
+    m_slot_seconds: float
+    measure_span: float
+    stats: Dict[str, float]
+    lat: Dict[str, float]            # latency_by_role percentiles
+    # steady-state-windowed meter roll-ups + lifetime totals
+    m_tokens: int
+    m_joules: float
+    m_prefill_joules: float
+    m_idle_joules: float
+    m_handoff_joules: float
+    m_handoff_bytes: float
+    m_dispatch_joules: float
+    tokens: int
+    joules: float
+    sim_times: np.ndarray            # per-instance clock at drain
+    p_idle_w: float
+    # per-completed-request metric columns (vectorized SLO attribution)
+    arrival: np.ndarray
+    first_token: np.ndarray
+    finish: np.ndarray
+    n_generated: np.ndarray
+    ttft_role: np.ndarray            # index into FleetSim.order
+    # cross-pool flow
+    n_overflowed: int
+    n_escalated: int
+    n_handoffs: int
+    outbox: Dict[str, List[Request]]  # dest role -> request snapshots
+
+
+class PoolGroup:
+    """One provisioned pool: a `BatchedPoolEngine` simulating all its
+    instance replicas in lockstep, plus the replica load balancer.
+    Requests are balanced by least *total assigned* predicted work
+    (prompt + predicted output for decode pools; prompt only for
+    prefill-phase pools, whose work ends at the handoff).  Every request
+    is routed before any engine runs (see the execution model above), so
+    there is no notion of work "draining" between assignments —
+    `_pending` is deliberately a monotone cumulative-assignment counter,
+    which load-balances the whole trace across replicas.  Quacks like a
+    PoolEngine for the router (submit / stats)."""
+
+    def __init__(self, role: str, engine: BatchedPoolEngine):
         self.role = role
-        self.engines = engines
-        self.phase = engines[0].phase
-        self._pending = np.zeros(len(engines), np.float64)
+        self.engine = engine
+        self.phase = engine.phase
+        self._pending = np.zeros(engine.instances, np.float64)
+        self.summary: Optional[PoolSummary] = None
+
+    @property
+    def instances(self) -> int:
+        return self.engine.instances
 
     def submit(self, req: Request) -> None:
         i = int(np.argmin(self._pending))
         self._pending[i] += req.prompt_len if self.phase == "prefill" \
             else req.predicted_total
-        self.engines[i].submit(req)
+        self.engine.submit(req, i)
+
+    def queue_rids(self, instance: int) -> List[int]:
+        """Request ids queued on one replica (tests/debug)."""
+        return [r.rid for r in self.engine.queues[instance]]
 
     @property
     def completed(self) -> List[Request]:
-        return [r for e in self.engines for r in e.completed]
+        return [r for lst in self.engine.completed for r in lst]
 
     @property
     def relayed(self) -> List[Request]:
         """Requests whose prefill this (prefill-phase) pool drained."""
-        return [r for e in self.engines for r in e.relayed]
+        return [r for lst in self.engine.relayed for r in lst]
+
+    @property
+    def streamed_params(self) -> float:
+        return self.engine._streamed_params
+
+    @property
+    def prefill_chunk(self) -> Optional[int]:
+        return self.engine.prefill_chunk
+
+    @property
+    def dispatch_s(self) -> float:
+        return self.engine.bank.dispatch_s
+
+    @property
+    def lifetime_tokens(self) -> int:
+        return int(self.engine.bank.tokens.sum())
 
     def latency_percentiles(self) -> Dict[str, float]:
         """TTFT/TPOT/e2e percentiles of the requests that *finished* in
@@ -289,36 +384,85 @@ class PoolGroup:
         finally drained).  A prefill-phase pool finishes nothing — its
         percentiles cover the requests it relayed (their TTFT is this
         pool's doing; the downstream metrics are informational)."""
+        if self.summary is not None:
+            return dict(self.summary.lat)
         return _percentiles(self.completed or self.relayed)
 
     def measured_totals(self) -> Dict[str, float]:
-        return dict(tokens=sum(e.meter.m_tokens for e in self.engines),
-                    joules=sum(e.meter.m_joules for e in self.engines))
+        if self.summary is not None:
+            return dict(tokens=self.summary.m_tokens,
+                        joules=self.summary.m_joules)
+        b = self.engine.bank
+        return dict(tokens=int(b.m_tokens.sum()),
+                    joules=float(b.m_joules.sum()))
 
     def stats(self) -> Dict[str, float]:
-        tok = sum(e.meter.tokens for e in self.engines)
-        joules = sum(e.meter.joules for e in self.engines)
-        times = [e.meter.sim_time_s for e in self.engines]
-        slot_s = sum(e.slot_seconds for e in self.engines)
-        avail = sum(e.n_slots * t for e, t in zip(self.engines, times))
+        if self.summary is not None:
+            return dict(self.summary.stats)
+        return self._compute_stats()
+
+    def _compute_stats(self) -> Dict[str, float]:
+        eng, b = self.engine, self.engine.bank
+        tok = int(b.tokens.sum())
+        joules = float(b.joules.sum())
+        slot_s = float(eng.slot_seconds.sum())
+        avail = eng.n_slots * float(b.sim_time_s.sum())
         return dict(role=self.role,
                     phase=self.phase,
-                    window=self.engines[0].window,
-                    instances=len(self.engines),
-                    n_slots=self.engines[0].n_slots,
-                    completed=sum(len(e.completed) for e in self.engines),
-                    relayed=sum(len(e.relayed) for e in self.engines),
-                    preempted=sum(e.preempted for e in self.engines),
-                    escalated=sum(e.n_escalated for e in self.engines),
+                    window=eng.window,
+                    instances=eng.instances,
+                    n_slots=eng.n_slots,
+                    completed=sum(len(c) for c in eng.completed),
+                    relayed=sum(len(c) for c in eng.relayed),
+                    preempted=int(eng.preempted.sum()),
+                    escalated=int(eng.n_escalated.sum()),
                     tokens=tok, joules=round(joules, 1),
-                    m_tokens=sum(e.meter.m_tokens for e in self.engines),
-                    m_joules=round(sum(e.meter.m_joules
-                                       for e in self.engines), 1),
-                    m_prefill_joules=round(sum(e.meter.m_prefill_joules
-                                               for e in self.engines), 1),
+                    m_tokens=int(b.m_tokens.sum()),
+                    m_joules=round(float(b.m_joules.sum()), 1),
+                    m_prefill_joules=round(
+                        float(b.m_prefill_joules.sum()), 1),
                     tok_per_watt=round(tok / joules, 3) if joules else 0.0,
                     occupancy=round(slot_s / avail, 3) if avail else 0.0,
-                    sim_time_s=round(max(times), 3) if times else 0.0)
+                    sim_time_s=round(float(b.sim_time_s.max()), 3)
+                    if eng.instances else 0.0)
+
+    def summarize(self, role_idx: Dict[str, int],
+                  outbox: Dict[str, List[Request]],
+                  n_overflowed: int, n_escalated: int,
+                  n_handoffs: int) -> PoolSummary:
+        """One-pass aggregation after the pool drains; cached so every
+        later report path (stats / measured_totals / fleet roll-up /
+        SLO attribution) reads the same numbers without re-summing."""
+        eng, b = self.engine, self.engine.bank
+        comp = self.completed
+        own = role_idx[self.role]
+        self.summary = PoolSummary(
+            role=self.role, phase=self.phase, window=eng.window,
+            instances=eng.instances, n_slots=eng.n_slots,
+            m_slot_seconds=float(eng.m_slot_seconds.sum()),
+            measure_span=max(b.measure_t1 - b.measure_t0, 1e-9),
+            stats=self._compute_stats(),
+            lat=_percentiles(comp or self.relayed),
+            m_tokens=int(b.m_tokens.sum()),
+            m_joules=float(b.m_joules.sum()),
+            m_prefill_joules=float(b.m_prefill_joules.sum()),
+            m_idle_joules=float(b.m_idle_joules.sum()),
+            m_handoff_joules=float(b.m_handoff_joules.sum()),
+            m_handoff_bytes=float(b.m_handoff_bytes.sum()),
+            m_dispatch_joules=float(b.m_dispatch_joules.sum()),
+            tokens=int(b.tokens.sum()),
+            joules=float(b.joules.sum()),
+            sim_times=b.sim_time_s.copy(),
+            p_idle_w=eng.profile.power_model.p_idle_w,
+            arrival=np.array([r.arrival_time for r in comp]),
+            first_token=np.array([r.first_token_time for r in comp]),
+            finish=np.array([r.finish_time for r in comp]),
+            n_generated=np.array([r.n_generated for r in comp], np.int64),
+            ttft_role=np.array([role_idx.get(r.prefill_role, own)
+                                for r in comp], np.int64),
+            n_overflowed=n_overflowed, n_escalated=n_escalated,
+            n_handoffs=n_handoffs, outbox=outbox)
+        return self.summary
 
 
 class FleetSim:
@@ -376,18 +520,16 @@ class FleetSim:
             binding = registry.for_role(role)
             chunk = scaled_prefill_chunk(p.profile, prefill_chunk) \
                 if prefill_chunk else prefill_chunk
-            engines = [
-                PoolEngine(None, None, window=p.window, profile=p.profile,
-                           name=f"{p.name}#{j}",
-                           prefill_chunk=chunk,
-                           phase=p.phase,
-                           prefill_mfu=p.prefill_engine_mfu,
-                           evict_on_overflow=evict, respect_arrival=True,
-                           streamed_params=binding.streamed_params,
-                           dispatch_ms=binding.dispatch_ms,
-                           rng_seed=rng_seed + 7919 * j)
-                for j in range(max(p.instances, 1))]
-            self.groups[role] = PoolGroup(role, engines)
+            engine = BatchedPoolEngine(
+                instances=max(p.instances, 1), window=p.window,
+                profile=p.profile, name=p.name,
+                prefill_chunk=chunk, phase=p.phase,
+                prefill_mfu=p.prefill_engine_mfu,
+                evict_on_overflow=evict, respect_arrival=True,
+                streamed_params=binding.streamed_params,
+                dispatch_ms=binding.dispatch_ms,
+                rng_seed=rng_seed)
+            self.groups[role] = PoolGroup(role, engine)
         # cross-pool edges, all pointing forward in `order`:
         #   handoff_to  — prefill role -> its slice's decode role
         #   overflow_to — evicting role -> where its evictions re-enter
@@ -409,8 +551,8 @@ class FleetSim:
                 self.overflow_to[r1] = pf_next
             # per-role whole-instance KV bytes per prompt token
             self._kv_bytes_per_tok = {
-                r: registry.for_role(r).model.kv_bytes_per_token(
-                    tp=p.profile.tp) * p.profile.tp for r, p in pf_roles}
+                r: registry.for_role(r).kv_bytes_per_instance_token(
+                    p.profile) for r, p in pf_roles}
         else:
             for a, b in zip(self.order, self.order[1:]):
                 self.overflow_to[a] = b
@@ -422,64 +564,126 @@ class FleetSim:
         self.handoffs = 0
         self.escalations = 0
         self._window: Tuple[float, float] = (0.0, float("inf"))
+        self.summaries: Dict[str, PoolSummary] = {}
+        self.fresh_roles: List[str] = []
+
+    # simulated seconds served across every FleetSim.run in this process
+    # (per-run horizon = the last arrival).  Instrumentation for the
+    # bench's sim-seconds-per-wall-second throughput metric.
+    sim_seconds_total: float = 0.0
 
     def run(self, requests: List[Request], *, warmup_frac: float = 0.35,
-            max_iters: int = 20_000_000) -> Dict[str, dict]:
+            max_iters: int = 20_000_000,
+            reuse: Optional[Dict[str, PoolSummary]] = None
+            ) -> Dict[str, dict]:
+        """Route every request, drain the pools in topological order, and
+        return `report()`.
+
+        `reuse` maps a *prefix* of `self.order` to `PoolSummary`
+        snapshots from a previous, identically-provisioned run over the
+        identical trace (the SLO loop's incremental re-simulation —
+        core.slo validates the prefix): those pools are replayed from
+        their snapshots (summary adopted, outbox clones re-injected into
+        downstream fresh pools) instead of being simulated again.
+        Cross-pool flow only points forward, so a reused prefix can never
+        receive requests from a fresh pool; the trailing assert enforces
+        it."""
         reqs = sorted(requests, key=lambda r: r.arrival_time)
         # steady-state measurement window: skip the fleet fill-up, stop at
         # the last arrival (the drain tail is not steady state either)
         t_last = reqs[-1].arrival_time if reqs else 0.0
+        FleetSim.sim_seconds_total += t_last
         self._window = (warmup_frac * t_last, t_last)
         for grp in self.groups.values():
-            for e in grp.engines:
-                e.meter.measure_t0, e.meter.measure_t1 = self._window
+            grp.engine.bank.measure_t0, grp.engine.bank.measure_t1 = \
+                self._window
         for r in reqs:
             self.router.route(r)
+        reuse = reuse or {}
+        self.summaries: Dict[str, PoolSummary] = {}
+        self.fresh_roles: List[str] = []
+        role_idx = {r: k for k, r in enumerate(self.order)}
         # topological order: cross-pool flow (overflow migrations and KV
         # handoffs) only points forward, so draining pools in `order` sees
         # every injected request before its destination runs
         inbox: Dict[str, List[Request]] = {role: [] for role in self.order}
         for role in self.order:
+            if role in reuse:
+                s = reuse[role]
+                self.groups[role].summary = s
+                self.summaries[role] = s
+                self.migrations += s.n_overflowed
+                self.escalations += s.n_escalated
+                self.handoffs += s.n_handoffs
+                for dest, snaps in s.outbox.items():
+                    if dest not in reuse:   # flow into a reused pool is
+                        inbox[dest].extend(  # already inside its snapshot
+                            copy.copy(r) for r in snaps)
+                continue
+            self.fresh_roles.append(role)
             grp = self.groups[role]
+            eng = grp.engine
             if inbox[role]:
                 for r in sorted(inbox[role], key=lambda r: r.ready_time):
                     grp.submit(r)
-                for e in grp.engines:   # keep queues time-sorted for the
-                    e.queue = deque(    # head-gated admission
-                        sorted(e.queue, key=e._ready))
                 inbox[role] = []
-            for e in grp.engines:
-                e.run_until_drained(max_iters=max_iters)
-                if e.overflowed:
+            eng.sort_queues()       # keep queues time-sorted for the
+            eng.run_until_drained(max_iters=max_iters)  # head-gated admission
+            outbox: Dict[str, List[Request]] = {}
+            n_over = n_esc = n_hand = 0
+            for i in range(eng.instances):
+                if eng.overflowed[i]:
                     dest = self.overflow_to.get(role)
                     assert dest is not None, \
                         "the terminal pool may not overflow-evict"
-                    self.migrations += len(e.overflowed)
-                    inbox[dest].extend(e.overflowed)
-                    e.overflowed = []
-                if e.escalated:
+                    n_over += len(eng.overflowed[i])
+                    inbox[dest].extend(eng.overflowed[i])
+                    outbox.setdefault(dest, []).extend(
+                        copy.copy(r) for r in eng.overflowed[i])
+                    eng.overflowed[i] = []
+                if eng.escalated[i]:
                     dest = self.escalate_to.get(role)
                     assert dest is not None, \
                         "only the semantic small pool may escalate"
-                    self.escalations += len(e.escalated)
-                    inbox[dest].extend(e.escalated)
-                    e.escalated = []
-                if e.handoff:
+                    n_esc += len(eng.escalated[i])
+                    inbox[dest].extend(eng.escalated[i])
+                    outbox.setdefault(dest, []).extend(
+                        copy.copy(r) for r in eng.escalated[i])
+                    eng.escalated[i] = []
+                if eng.handoff[i]:
                     dest = self.handoff_to[role]
                     kappa = self._kv_bytes_per_tok[role]
-                    for r in e.handoff:
+                    for r in eng.handoff[i]:
                         n_bytes = kappa * r.prompt_len
                         delay = n_bytes / self.kv_interconnect_Bps
-                        e.meter.charge_handoff(
-                            n_bytes, start_s=r.ready_time,
+                        eng.bank.charge_handoff_one(
+                            i, n_bytes, start_s=r.ready_time,
                             duration_s=delay,
                             j_per_byte=self.kv_handoff_j_per_byte)
                         r.ready_time += delay
                         r.prefill_role = role
-                    self.handoffs += len(e.handoff)
-                    inbox[dest].extend(e.handoff)
-                    e.handoff = []
+                    n_hand += len(eng.handoff[i])
+                    inbox[dest].extend(eng.handoff[i])
+                    outbox.setdefault(dest, []).extend(
+                        copy.copy(r) for r in eng.handoff[i])
+                    eng.handoff[i] = []
+            self.migrations += n_over
+            self.escalations += n_esc
+            self.handoffs += n_hand
+            self.summaries[role] = grp.summarize(role_idx, outbox,
+                                                 n_over, n_esc, n_hand)
         assert not any(inbox.values()), "undelivered cross-pool requests"
+        # a prefill pool's latency snapshot was taken at its drain, before
+        # the downstream decode pool filled in its relayed requests'
+        # finish/TPOT — refresh those percentiles now that the whole
+        # fleet has drained (the relayed objects are live, not clones),
+        # so latency_by_role keeps reporting the informational
+        # e2e/tpot keys and replayed summaries carry them too
+        for role in self.fresh_roles:
+            grp = self.groups[role]
+            if grp.phase == "prefill" and grp.summary is not None:
+                grp.summary.lat = _percentiles(grp.completed
+                                               or grp.relayed)
         return self.report()
 
     def latency_by_role(self) -> Dict[str, Dict[str, float]]:
@@ -489,37 +693,48 @@ class FleetSim:
                 for role in self.order}
 
     def report(self) -> Dict[str, dict]:
+        """Fleet roll-up assembled from the cached per-pool summaries in
+        one pass (no per-engine re-aggregation — the summaries were
+        computed once when each pool drained)."""
         out: Dict[str, dict] = {}
-        completed: List[Request] = []
         tok = joules = prefill_j = idle_j = handoff_j = handoff_b = 0.0
         dispatch_j = 0.0
-        for role, grp in self.groups.items():
-            out[role] = grp.stats()
-            completed += grp.completed
-            tok += sum(e.meter.m_tokens for e in grp.engines)
-            joules += sum(e.meter.m_joules for e in grp.engines)
-            prefill_j += sum(e.meter.m_prefill_joules for e in grp.engines)
-            idle_j += sum(e.meter.m_idle_joules for e in grp.engines)
-            handoff_j += sum(e.meter.m_handoff_joules for e in grp.engines)
-            handoff_b += sum(e.meter.m_handoff_bytes for e in grp.engines)
-            dispatch_j += sum(e.meter.m_dispatch_joules
-                              for e in grp.engines)
+        n_completed = 0
+        arrival, first, finish, ngen = [], [], [], []
+        for role in self.order:
+            s = self.summaries[role]
+            out[role] = dict(s.stats)
+            n_completed += len(s.arrival)
+            arrival.append(s.arrival)
+            first.append(s.first_token)
+            finish.append(s.finish)
+            ngen.append(s.n_generated)
+            tok += s.m_tokens
+            joules += s.m_joules
+            prefill_j += s.m_prefill_joules
+            idle_j += s.m_idle_joules
+            handoff_j += s.m_handoff_joules
+            handoff_b += s.m_handoff_bytes
+            dispatch_j += s.m_dispatch_joules
         # engines that sat idle past the window end never saw those idle
         # watts: charge the gap so the fleet denominator is wall-clock honest
         t0, t1 = self._window
-        for grp in self.groups.values():
-            for e in grp.engines:
-                gap = t1 - max(e.meter.sim_time_s, t0)
-                if gap > 0:
-                    extra = e.profile.power_model.p_idle_w * gap
-                    joules += extra
-                    idle_j += extra
+        for role in self.order:
+            s = self.summaries[role]
+            gap = np.maximum(0.0, t1 - np.maximum(s.sim_times, t0))
+            extra = s.p_idle_w * float(gap.sum())
+            joules += extra
+            idle_j += extra
         span = max(t1 - t0, 1e-9)
+        arrival = np.concatenate(arrival) if arrival else np.empty(0)
+        first = np.concatenate(first) if first else np.empty(0)
+        finish = np.concatenate(finish) if finish else np.empty(0)
+        ngen = np.concatenate(ngen) if ngen else np.empty(0, np.int64)
         # decode-only backs out every non-output charge: prefill compute,
         # idle draw and the KV-handoff interconnect energy (core.disagg)
         decode_j = joules - prefill_j - idle_j - handoff_j
         out["fleet"] = dict(
-            completed=len(completed),
+            completed=n_completed,
             migrations=self.migrations,
             handoffs=self.handoffs,
             escalations=self.escalations,
@@ -541,7 +756,7 @@ class FleetSim:
             moe_dispatch_joules=round(dispatch_j, 1),
             moe_dispatch_energy_frac=round(dispatch_j / joules, 4)
             if joules else 0.0,
-            **_percentiles(completed))
+            **latency_percentiles_arrays(arrival, first, finish, ngen))
         return out
 
 

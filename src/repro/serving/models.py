@@ -45,6 +45,17 @@ class ModelBinding:
     def streamed_params(self) -> float:
         return self.model.streamed_params
 
+    def kv_bytes_per_instance_token(self,
+                                    profile: Optional[BaseProfile] = None,
+                                    ) -> float:
+        """Whole-instance KV bytes per prompt token — what a prefill ->
+        decode handoff moves over the interconnect per token (the
+        per-GPU KV share times the TP degree of the pool the prefill ran
+        on; pass `profile` when the pool runs on a different deployment
+        than the binding's default)."""
+        prof = profile if profile is not None else self.profile
+        return self.model.kv_bytes_per_token(tp=prof.tp) * prof.tp
+
 
 @dataclasses.dataclass
 class ModelProfileRegistry:

@@ -97,17 +97,31 @@ def synthetic_requests(workload, n: int, vocab: int, *, seed: int = 0,
 def latency_percentiles(reqs: Sequence[Request]) -> Dict[str, float]:
     """TTFT / TPOT / end-to-end percentiles over completed requests (sim
     time; arrival_time is submission into the fleet)."""
-    out: Dict[str, float] = {}
     if not reqs:
+        return {}
+    return latency_percentiles_arrays(
+        np.array([r.arrival_time for r in reqs]),
+        np.array([r.first_token_time for r in reqs]),
+        np.array([r.finish_time for r in reqs]),
+        np.array([r.n_generated for r in reqs], np.int64))
+
+
+def latency_percentiles_arrays(arrival: np.ndarray, first_token: np.ndarray,
+                               finish: np.ndarray, n_generated: np.ndarray,
+                               ) -> Dict[str, float]:
+    """Column-oriented twin of `latency_percentiles` — the fleet
+    simulator's cached pool summaries carry per-request metric columns,
+    so the roll-up never rebuilds Request lists.  Shared metric
+    definitions live here, once: TTFT needs a first token, e2e a finish,
+    TPOT both plus >1 generated token."""
+    out: Dict[str, float] = {}
+    if not len(arrival):
         return out
-    ttft = np.array([r.first_token_time - r.arrival_time for r in reqs
-                     if r.first_token_time >= 0])
-    e2e = np.array([r.finish_time - r.arrival_time for r in reqs
-                    if r.finish_time >= 0])
-    tpot = np.array([(r.finish_time - r.first_token_time)
-                     / (r.n_generated - 1) for r in reqs
-                     if r.finish_time >= 0 and r.first_token_time >= 0
-                     and r.n_generated > 1])
+    ttft = (first_token - arrival)[first_token >= 0]
+    e2e = (finish - arrival)[finish >= 0]
+    tmask = (finish >= 0) & (first_token >= 0) & (n_generated > 1)
+    tpot = (finish[tmask] - first_token[tmask]) \
+        / (n_generated[tmask] - 1)
     if len(ttft):
         out["ttft_p50_s"] = round(float(np.quantile(ttft, 0.5)), 4)
         out["ttft_p99_s"] = round(float(np.quantile(ttft, 0.99)), 4)

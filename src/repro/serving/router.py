@@ -49,7 +49,6 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.routing import ESCALATION_DETECT_TOKENS
 
-from .engine import PoolEngine
 from .request import Request
 
 # kinds whose [small, large] rungs serve different models and whose
@@ -121,7 +120,12 @@ class RouterPolicy:
 
 
 class ContextRouter:
-    def __init__(self, pools: Dict[str, PoolEngine], policy: RouterPolicy):
+    """Routes requests over anything pool-shaped: a scalar `PoolEngine`,
+    a whole `PoolGroup` (the fleet simulator's batched pool), or any
+    object with submit / stats / measured_totals — the router only ever
+    submits and aggregates."""
+
+    def __init__(self, pools: Dict[str, object], policy: RouterPolicy):
         self.pools = pools
         self.policy = policy
         ladder = policy.admission_ladder(list(pools))

@@ -122,6 +122,27 @@ def test_recalibrate_only_adds_capacity():
     assert pool.instances >= grown + 7
 
 
+def test_measured_hol_override_raises_both_closed_form_bounds():
+    """The SLO loop now drives PoolOverride.hol_inflation from the
+    simulator's measured occupancy inflation (core.slo); the knob must
+    feed back into *both* core.fleet sizing bounds — HOL blocking holds
+    decode slots longer AND re-queues prefill load."""
+    rep = FleetOpt(b_short=4096, gamma=2.0).provision(
+        AZURE, H100_LLAMA70B, LLAMA31_70B)
+    pools = sorted(rep.pools, key=lambda p: p.window)
+    long_pool = pools[1]
+    dec0, pre0 = long_pool.decode_bound, long_pool.prefill_bound
+    n0 = long_pool.n_inflight
+    apply_overrides(rep, {"long": PoolOverride(hol_inflation=1.9)},
+                    roles=["short", "long"], streamed_params=STREAMED)
+    assert long_pool.n_inflight == pytest.approx(1.9 * n0)
+    assert long_pool.decode_bound >= dec0
+    assert long_pool.prefill_bound >= pre0
+    assert long_pool.decode_bound + long_pool.prefill_bound \
+        > dec0 + pre0
+    assert long_pool.hol_inflation == 1.9
+
+
 def test_apply_overrides_targets_roles():
     rep = FleetOpt(b_short=4096, gamma=2.0).provision(
         AZURE, H100_LLAMA70B, LLAMA31_70B)

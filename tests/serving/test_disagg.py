@@ -210,6 +210,22 @@ def test_disagg_removes_prefill_interference_from_decode_pools(disagg_cells):
                 assert s["m_prefill_joules"] > 0.0, (role, s)
 
 
+def test_prefill_role_latency_includes_downstream_metrics(disagg_cells):
+    """latency_by_role for a prefill-phase pool covers the requests it
+    relayed — including the e2e/TPOT metrics their downstream decode
+    pool filled in after the prefill pool drained (regression pin: the
+    SoA summaries are snapshotted per pool at drain time, and prefill
+    pools' percentiles must be refreshed once the fleet finishes)."""
+    from repro.serving import FleetSim, build_topology, trace_requests
+    policy, plan, reg = build_topology("disagg", AZURE, H100_LLAMA70B,
+                                       LLAMA31_70B, b_short=4096)
+    sim = FleetSim(policy, plan, registry=reg)
+    sim.run(trace_requests(AZURE, 400, seed=2))
+    for role, lat in sim.latency_by_role().items():
+        assert {"ttft_p99_s", "e2e_p99_s", "tpot_p99_ms"} <= set(lat), \
+            (role, lat)
+
+
 def test_disagg_ttft_under_unconstrained_sizing(disagg_cells):
     """Dedicated prefill removes the interleave competition: plain disagg
     meets the 500 ms TTFT p99 already at the unconstrained Eq. 4 sizing

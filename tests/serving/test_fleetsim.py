@@ -189,17 +189,17 @@ def test_pool_group_balances_by_total_assigned_work():
     """Regression pin for the intended PoolGroup semantics: replicas are
     balanced by cumulative *assigned* predicted work (routing happens
     before any engine runs, so there is no draining to track)."""
-    engines = [PoolEngine(None, None, window=4096, profile=H100_LLAMA70B,
-                          n_slots=4, name=f"e{i}", streamed_params=STREAMED)
-               for i in range(2)]
-    grp = PoolGroup("g", engines)
+    from repro.serving import BatchedPoolEngine
+    grp = PoolGroup("g", BatchedPoolEngine(
+        instances=2, window=4096, profile=H100_LLAMA70B, n_slots=4,
+        name="e", streamed_params=STREAMED))
     for i, total in enumerate((10, 10, 4, 30)):
         grp.submit(Request(rid=i, prompt=np.zeros(1, np.int64),
                            max_new_tokens=1, predicted_output=total - 1))
     # argmin of cumulative work: e0 <- r0 (10), e1 <- r1 (10),
     # e0 <- r2 (14), e1 <- r3 (40)
-    assert [r.rid for r in engines[0].queue] == [0, 2]
-    assert [r.rid for r in engines[1].queue] == [1, 3]
+    assert grp.queue_rids(0) == [0, 2]
+    assert grp.queue_rids(1) == [1, 3]
     assert list(grp._pending) == [14.0, 40.0]
 
 

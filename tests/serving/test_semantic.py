@@ -158,9 +158,9 @@ def test_build_topology_binds_models_per_role():
     assert sim.escalate_to == {"small": "large"}
     assert sim.overflow_to == {"small": "large"}
     # each pool's engines stream their own model's bytes
-    assert sim.groups["small"].engines[0]._streamed_params \
+    assert sim.groups["small"].streamed_params \
         == LLAMA31_8B.streamed_params
-    assert sim.groups["large"].engines[0]._streamed_params \
+    assert sim.groups["large"].streamed_params \
         == LLAMA31_70B.streamed_params
 
 
@@ -204,9 +204,9 @@ def test_moe_pool_engines_stream_active_params():
     assert pool.profile.roofline.w_ms == pytest.approx(
         prof.roofline.w_ms + 2.0)
     sim = FleetSim(policy, plan, registry=registry)
-    eng = sim.groups["moe"].engines[0]
-    assert eng._streamed_params == QWEN3_235B_A22B.n_active_params
-    assert eng.meter.dispatch_s == pytest.approx(2e-3)
+    grp = sim.groups["moe"]
+    assert grp.streamed_params == QWEN3_235B_A22B.n_active_params
+    assert grp.dispatch_s == pytest.approx(2e-3)
 
 
 # --- bandwidth-scaled prefill chunk -------------------------------------
@@ -225,7 +225,7 @@ def test_fleetsim_applies_scaled_chunk_per_pool():
     policy, plan, registry = build_topology(
         "homo", AZURE, B200_LLAMA70B_FLEET, LLAMA31_70B)
     sim = FleetSim(policy, plan, registry=registry, prefill_chunk=512)
-    assert sim.groups["homo"].engines[0].prefill_chunk == \
+    assert sim.groups["homo"].prefill_chunk == \
         scaled_prefill_chunk(B200_LLAMA70B_FLEET, 512)
 
 
@@ -304,8 +304,7 @@ def test_escalated_tokens_conserved_end_to_end():
     rep = sim.run(reqs)
     assert rep["fleet"]["completed"] == 1200
     assert rep["fleet"]["escalations"] > 0
-    metered = sum(e.meter.tokens for grp in sim.groups.values()
-                  for e in grp.engines)
+    metered = sum(grp.lifetime_tokens for grp in sim.groups.values())
     earned = sum(r.n_generated - 1 for grp in sim.groups.values()
                  for r in grp.completed)
     assert metered == earned
