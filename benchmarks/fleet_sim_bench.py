@@ -120,15 +120,18 @@ def _table_d_cells(wl):
     return cells
 
 
-def table_d(workloads, *, n_requests: int, slo_requests: int, seed: int):
+def table_d(workloads, *, n_requests: int, slo_requests: int, seed: int,
+            engine: str = "numpy"):
     """Model-heterogeneous cells: measured + SLO-constrained, per workload."""
     rows = []
     for wl in workloads:
         for kind, prof, mdl, kw in _table_d_cells(wl):
             cell = simulate_topology(kind, wl, prof, mdl,
-                                     n_requests=n_requests, seed=seed, **kw)
+                                     n_requests=n_requests, seed=seed,
+                                     engine=engine, **kw)
             res = size_to_slo(kind, wl, prof, mdl,
-                              n_requests=slo_requests, seed=seed, **kw)
+                              n_requests=slo_requests, seed=seed,
+                              engine=engine, **kw)
             f = cell.report["fleet"]
             rows.append(dict(
                 table="model_hetero", workload=wl.name, topology=kind,
@@ -151,14 +154,15 @@ def table_d(workloads, *, n_requests: int, slo_requests: int, seed: int):
     return rows
 
 
-def _slo_cell(kind: str, profile, *, n_requests: int, seed: int):
+def _slo_cell(kind: str, profile, *, n_requests: int, seed: int,
+              engine: str = "numpy"):
     kw = {}
     if kind == "multipool":
         kw["windows"] = ladder_windows(K_POOLS)
     else:
         kw["b_short"] = B_SHORT[AZURE.name]
     return size_to_slo(kind, AZURE, profile, LLAMA31_70B,
-                       n_requests=n_requests, seed=seed, **kw)
+                       n_requests=n_requests, seed=seed, engine=engine, **kw)
 
 
 class _TableTimer:
@@ -192,7 +196,7 @@ class _TableTimer:
 
 
 def run(n_requests: int = 10_000, slo_requests: int = 3000, seed: int = 0,
-        quick: bool = False):
+        quick: bool = False, engine: str = "numpy"):
     timer = _TableTimer(dict(quick=quick, n_requests=n_requests,
                              slo_requests=slo_requests, seed=seed))
     rows = []
@@ -200,7 +204,8 @@ def run(n_requests: int = 10_000, slo_requests: int = 3000, seed: int = 0,
         for kind in TOPOLOGIES:
             cell = simulate_topology(
                 kind, wl, H100_LLAMA70B, LLAMA31_70B,
-                b_short=B_SHORT[wl.name], n_requests=n_requests, seed=seed)
+                b_short=B_SHORT[wl.name], n_requests=n_requests, seed=seed,
+                engine=engine)
             f = cell.report["fleet"]
             rows.append(dict(cell.row(), table="unconstrained",
                              occupancy={r: s["occupancy"]
@@ -212,7 +217,8 @@ def run(n_requests: int = 10_000, slo_requests: int = 3000, seed: int = 0,
     slo = {}
     for gen, prof in GENERATIONS:
         for kind in SLO_TOPOLOGIES:
-            res = _slo_cell(kind, prof, n_requests=slo_requests, seed=seed)
+            res = _slo_cell(kind, prof, n_requests=slo_requests,
+                            seed=seed, engine=engine)
             slo[(gen, kind)] = res
             rows.append(dict(res.row(), table="slo", generation=gen))
     timer.lap("slo")
@@ -222,10 +228,11 @@ def run(n_requests: int = 10_000, slo_requests: int = 3000, seed: int = 0,
     for kind in DISAGG_TOPOLOGIES:
         cell = simulate_topology(
             kind, AZURE, H100_LLAMA70B, LLAMA31_70B,
-            b_short=B_SHORT[AZURE.name], n_requests=n_requests, seed=seed)
+            b_short=B_SHORT[AZURE.name], n_requests=n_requests, seed=seed,
+            engine=engine)
         res = size_to_slo(kind, AZURE, H100_LLAMA70B, LLAMA31_70B,
                           b_short=B_SHORT[AZURE.name],
-                          n_requests=slo_requests, seed=seed)
+                          n_requests=slo_requests, seed=seed, engine=engine)
         f = cell.report["fleet"]
         rows.append(dict(
             table="disagg", workload=AZURE.name, topology=kind,
@@ -247,7 +254,7 @@ def run(n_requests: int = 10_000, slo_requests: int = 3000, seed: int = 0,
     # Table D: model heterogeneity (Azure always; Agent in the full run)
     rows += table_d((AZURE,) if quick else (AZURE, AGENT),
                     n_requests=n_requests, slo_requests=slo_requests,
-                    seed=seed)
+                    seed=seed, engine=engine)
     timer.lap("model_hetero")
     az = {r["topology"]: r["simulated"] for r in rows
           if r.get("workload") == "azure-conv"
@@ -318,6 +325,11 @@ def main(argv=None) -> None:
     ap.add_argument("--quick", action="store_true",
                     help="1k-request (1.5k SLO) smoke run (CI)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", choices=("numpy", "jax"), default="numpy",
+                    help="pool drive loop: the numpy oracle (default) or "
+                         "the compiled serving.jax_engine drains — same "
+                         "cells, same tolerances (CI diffs jax against "
+                         "the committed numpy baseline)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="dump {'meta', 'rows'} JSON (the CI perf-"
                          "regression baseline/current format)")
@@ -330,7 +342,8 @@ def main(argv=None) -> None:
     n = 1000 if args.quick else args.n_requests
     n_slo = 1500 if args.quick else args.slo_requests
     rows, derived, timings = run(n_requests=n, slo_requests=n_slo,
-                                 seed=args.seed, quick=args.quick)
+                                 seed=args.seed, quick=args.quick,
+                                 engine=args.engine)
     if args.json:
         with open(args.json, "w") as fh:
             json.dump({"meta": dict(n_requests=n, slo_requests=n_slo,

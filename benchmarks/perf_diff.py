@@ -131,7 +131,12 @@ def _total_wall(rows: list) -> float:
 
 
 def wall_budget_diff(base_path: str, cur_path: str,
-                     budget: float) -> dict:
+                     budget: float, floor_s: float = 2.0) -> dict:
+    """Gate on current/baseline total wall-clock ratio, with an absolute
+    grace floor: runs whose *current* total is under `floor_s` pass
+    regardless of ratio — at sub-second totals the ratio is dominated by
+    process start-up and filesystem jitter, not by the simulator, and a
+    2x blip on a 0.4 s table is noise, not a regression."""
     b_rows, c_rows = _bench_rows(base_path), _bench_rows(cur_path)
     # wall seconds are only comparable under the same bench config (a
     # full-run dump vs the quick baseline would silently disable — or
@@ -151,10 +156,12 @@ def wall_budget_diff(base_path: str, cur_path: str,
               for t in b_by]
     b_tot, c_tot = _total_wall(b_rows), _total_wall(c_rows)
     ratio = c_tot / b_tot if b_tot else float("inf")
-    return dict(budget=budget, baseline_total_s=b_tot,
+    under_floor = c_tot < floor_s
+    return dict(budget=budget, floor_s=floor_s, baseline_total_s=b_tot,
                 current_total_s=round(c_tot, 3),
                 ratio=round(ratio, 3), tables=tables,
-                ok=ratio <= budget)
+                under_floor=under_floor,
+                ok=ratio <= budget or under_floor)
 
 
 def main(argv=None) -> None:
@@ -171,6 +178,11 @@ def main(argv=None) -> None:
                     help="committed BENCH_fleet_sim.json timing baseline")
     ap.add_argument("--bench-current", default=None,
                     help="freshly recorded timing dump (--time)")
+    ap.add_argument("--wall-floor", type=float, default=2.0,
+                    metavar="SECONDS",
+                    help="absolute grace floor: a current total under this"
+                         " many seconds passes the wall budget regardless"
+                         " of ratio (start-up jitter dominates tiny runs)")
     ap.add_argument("baseline")
     ap.add_argument("current")
     args = ap.parse_args(argv)
@@ -186,7 +198,8 @@ def main(argv=None) -> None:
             sys.exit("--wall-budget needs --bench-baseline and"
                      " --bench-current")
         wrep = wall_budget_diff(args.bench_baseline, args.bench_current,
-                                args.wall_budget)
+                                args.wall_budget,
+                                floor_s=args.wall_floor)
         print(json.dumps(wrep, indent=2))
         if wrep.get("config_mismatch"):
             wall_fail = (f"WALL-BUDGET CONFIG MISMATCH: baseline recorded"

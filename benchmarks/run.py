@@ -14,11 +14,12 @@ RESULTS = pathlib.Path(__file__).resolve().parent / "results"
 
 
 def _suites():
-    from . import (beyond_paper, engine_bench, extra_sweeps, fleet_sim_bench,
-                   kernel_bench, roofline_report, table1_context_law,
-                   table2_model_archs, table3_fleet_topology,
-                   table4_semantic_routing, table5_gpu_generations,
-                   table6_archetypes, table7_power_params)
+    from . import (beyond_paper, engine_bench, extra_sweeps, fleet_grid_bench,
+                   fleet_sim_bench, kernel_bench, roofline_report,
+                   table1_context_law, table2_model_archs,
+                   table3_fleet_topology, table4_semantic_routing,
+                   table5_gpu_generations, table6_archetypes,
+                   table7_power_params)
     return {
         # harness_run also records the full-run wall-clock trajectory to
         # results/BENCH_fleet_sim_full.json (the committed quick-config
@@ -26,6 +27,8 @@ def _suites():
         # only by a deliberate `fleet_sim_bench.py --quick --json ...
         # --time`; see dump_name below)
         "fleet_sim": fleet_sim_bench.harness_run,
+        # Table E sensitivity surface; self-skips on numpy-only hosts
+        "fleet_grid": fleet_grid_bench.harness_run,
         "table1_context_law": table1_context_law.run,
         "table2_model_archs": table2_model_archs.run,
         "table3_fleet_topology": table3_fleet_topology.run,

@@ -221,7 +221,8 @@ class _FleetMeasurer:
                  n_requests: int, seed: int, prefill_chunk: int,
                  small_model: Optional[ModelSpec],
                  small_profile: Optional[BaseProfile],
-                 misroute_rate: float, dispatch_ms: float):
+                 misroute_rate: float, dispatch_ms: float,
+                 engine: str = "numpy"):
         # serving imports are lazy: core stays importable without the
         # serving layer, and the serving layer itself imports core.fleet
         from repro.serving import fleetsim as _fs
@@ -235,6 +236,7 @@ class _FleetMeasurer:
         self.prefill_chunk = prefill_chunk
         self.small_model, self.small_profile = small_model, small_profile
         self.misroute_rate, self.dispatch_ms = misroute_rate, dispatch_ms
+        self.engine = engine
         # common random numbers: ONE frozen trace for every round/trial
         self._trace = sample_trace(workload, n_requests, seed=seed,
                                    max_total=long_window)
@@ -275,7 +277,7 @@ class _FleetMeasurer:
             misroute_seed=self.seed)
         sim = self._fs.FleetSim(policy, plan, registry=registry,
                                 prefill_chunk=self.prefill_chunk,
-                                rng_seed=self.seed)
+                                rng_seed=self.seed, engine=self.engine)
         roles = self._fs.topology_roles(self.kind, plan)
         # the only sim-relevant quantity a PoolOverride can move is the
         # instance count (the recalibrated MFU/HOL change the *bounds*,
@@ -312,7 +314,8 @@ def size_to_slo(kind: str, workload: Workload, profile: BaseProfile,
                 misroute_rate: float = 0.0,
                 dispatch_ms: float = 0.0,
                 trim: bool = True,
-                long_window: Optional[int] = None) -> SLOSizingResult:
+                long_window: Optional[int] = None,
+                engine: str = "numpy") -> SLOSizingResult:
     """Iteratively re-provision `kind` until the *measured* TTFT p99 meets
     the SLO (or `max_rounds` is exhausted — `compliant` reports which).
 
@@ -356,7 +359,7 @@ def size_to_slo(kind: str, workload: Workload, profile: BaseProfile,
         windows=windows, long_window=long_window, n_requests=n_requests,
         seed=seed, prefill_chunk=prefill_chunk, small_model=small_model,
         small_profile=small_profile, misroute_rate=misroute_rate,
-        dispatch_ms=dispatch_ms)
+        dispatch_ms=dispatch_ms, engine=engine)
     measure = measurer.measure
 
     def meets(report: Dict[str, dict]) -> bool:

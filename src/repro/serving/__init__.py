@@ -1,8 +1,10 @@
 from .energy import EnergyMeter, MeterBank
-from .engine import PoolEngine, scaled_prefill_chunk
+from .engine import (DrainTruncatedError, PoolEngine, resolve_prefill_chunk,
+                     scaled_prefill_chunk)
 from .fleetsim import (FleetSim, PoolGroup, PoolSummary, SimVsAnalytical,
                        analytical_decode_tok_per_watt, build_topology,
-                       simulate_topology, topology_roles, trace_requests)
+                       prepare_topology, run_fleet_grid, simulate_topology,
+                       topology_roles, trace_requests)
 from .models import ModelBinding, ModelProfileRegistry
 from .request import Request, synthetic_requests
 from .router import SEMANTIC_KINDS, ContextRouter, RouterPolicy
@@ -15,4 +17,5 @@ __all__ = ["EnergyMeter", "MeterBank", "PoolEngine", "BatchedPoolEngine",
            "SimVsAnalytical", "analytical_decode_tok_per_watt",
            "build_topology", "simulate_topology", "topology_roles",
            "trace_requests", "ModelBinding", "ModelProfileRegistry",
-           "SEMANTIC_KINDS", "scaled_prefill_chunk"]
+           "SEMANTIC_KINDS", "DrainTruncatedError", "resolve_prefill_chunk",
+           "scaled_prefill_chunk", "prepare_topology", "run_fleet_grid"]

@@ -76,6 +76,39 @@ _LCG_A, _LCG_C = 1664525, 1013904223   # Numerical Recipes LCG
 _NEVER = np.iinfo(np.int32).max        # escalate_at sentinel: no escalation
 
 
+class DrainTruncatedError(RuntimeError):
+    """`run_until_drained` hit its iteration cap with work still queued or
+    in flight.  A truncated drain has charged energy for only part of the
+    request stream, so every downstream ratio (tok/W, SLO feasibility)
+    would be plausible-but-wrong — callers must treat this as a hard
+    failure, never as a result."""
+
+    def __init__(self, name: str, max_iters: int, detail: str = ""):
+        self.pool = name
+        self.max_iters = max_iters
+        super().__init__(
+            f"pool {name!r} still busy after max_iters={max_iters}"
+            f"{': ' + detail if detail else ''} — raise max_iters; a"
+            " truncated drain under-counts tokens and energy")
+
+
+def resolve_prefill_chunk(profile: BaseProfile,
+                          prefill_chunk: Optional[int],
+                          phase: str) -> Optional[int]:
+    """Single source of the engines' prefill-chunk fallback.
+
+    Decode engines keep the caller's value (None/0 = legacy unchunked
+    immediate prefill).  Prefill-phase engines always work chunkwise — a 0
+    budget would spin `_step_prefill` without ever draining — so a missing
+    chunk falls back to `scaled_prefill_chunk(profile)`: the bandwidth-
+    scaled default, *not* a hard-coded 512 (which would pin H200/B200
+    disagg prefill pools to the H100 chunk rate and understate the
+    generation gain; on the H100 the two are identical)."""
+    if not prefill_chunk and phase == "prefill":
+        return scaled_prefill_chunk(profile)
+    return prefill_chunk
+
+
 def scaled_prefill_chunk(profile: BaseProfile, base: int = 512,
                          floor: int = 64) -> int:
     """Prefill-chunk budget scaled by the profile's HBM bandwidth relative
@@ -115,12 +148,8 @@ class PoolEngine:
         if phase == "prefill" and cfg is not None:
             raise ValueError("prefill-phase engines are analytical-only")
         self.phase = phase
-        if not prefill_chunk and phase == "prefill":
-            # prefill phase always works chunkwise: None *and* the decode
-            # engines' "unchunked" 0 fall back to the default chunk (a 0
-            # budget would spin _step_prefill without ever draining)
-            prefill_chunk = 512
-        self.prefill_chunk = prefill_chunk
+        self.prefill_chunk = resolve_prefill_chunk(profile, prefill_chunk,
+                                                   phase)
         # MFU every prefill charge is drawn at: the calibrated interleave
         # MFU by default; disagg prefill pools pass their dedicated-prefill
         # MFU (core.disagg.Disaggregated.prefill_mfu)
@@ -494,6 +523,10 @@ class PoolEngine:
                 self.advance_to(min(self._ready(r) for r in self.queue))
             self.step()
             it += 1
+        if self.busy:
+            raise DrainTruncatedError(
+                self.name, max_iters,
+                f"{len(self.queue)} queued, {self.n_active} in flight")
 
     def latency_percentiles(self) -> Dict[str, float]:
         return latency_percentiles(self.completed)

@@ -482,9 +482,19 @@ class FleetSim:
                  prefill_chunk: int = 512,
                  rng_seed: int = 0,
                  kv_interconnect_Bps: float = INTERCONNECT_BPS,
-                 kv_handoff_j_per_byte: float = HANDOFF_J_PER_BYTE):
+                 kv_handoff_j_per_byte: float = HANDOFF_J_PER_BYTE,
+                 engine: str = "numpy"):
         self.policy = policy
         self.plan = plan
+        if engine == "numpy":
+            engine_cls = BatchedPoolEngine
+        elif engine == "jax":
+            from .jax_engine import JaxPoolEngine
+            engine_cls = JaxPoolEngine
+        else:
+            raise ValueError(f"unknown engine {engine!r} "
+                             "(expected 'numpy' or 'jax')")
+        self.engine_kind = engine
         pools = sorted(plan.pools, key=lambda p: p.window)
         if registry is None:
             if model is None:
@@ -520,7 +530,7 @@ class FleetSim:
             binding = registry.for_role(role)
             chunk = scaled_prefill_chunk(p.profile, prefill_chunk) \
                 if prefill_chunk else prefill_chunk
-            engine = BatchedPoolEngine(
+            engine = engine_cls(
                 instances=max(p.instances, 1), window=p.window,
                 profile=p.profile, name=p.name,
                 prefill_chunk=chunk, phase=p.phase,
@@ -588,6 +598,22 @@ class FleetSim:
         Cross-pool flow only points forward, so a reused prefix can never
         receive requests from a fresh pool; the trailing assert enforces
         it."""
+        self.begin_run(requests, warmup_frac=warmup_frac, reuse=reuse)
+        for role in self.order:
+            self.pre_role(role)
+            self.drain_role(role, max_iters=max_iters)
+        return self.finish_run()
+
+    # --- staged drive: begin_run -> (pre_role, drain_role)* -> finish_run.
+    # `run` composes these; the grid driver (`run_fleet_grid`) interleaves
+    # them across many sims so each stage's JAX pools batch into one
+    # compiled drain.
+
+    def begin_run(self, requests: List[Request], *,
+                  warmup_frac: float = 0.35,
+                  reuse: Optional[Dict[str, PoolSummary]] = None) -> None:
+        """Route the trace, set every pool's measurement window, and open
+        the per-run cross-pool inbox state."""
         reqs = sorted(requests, key=lambda r: r.arrival_time)
         # steady-state measurement window: skip the fleet fill-up, stop at
         # the last arrival (the drain tail is not steady state either)
@@ -599,80 +625,102 @@ class FleetSim:
                 self._window
         for r in reqs:
             self.router.route(r)
-        reuse = reuse or {}
-        self.summaries: Dict[str, PoolSummary] = {}
-        self.fresh_roles: List[str] = []
-        role_idx = {r: k for k, r in enumerate(self.order)}
+        self.summaries = {}
+        self.fresh_roles = []
         # topological order: cross-pool flow (overflow migrations and KV
         # handoffs) only points forward, so draining pools in `order` sees
         # every injected request before its destination runs
-        inbox: Dict[str, List[Request]] = {role: [] for role in self.order}
-        for role in self.order:
-            if role in reuse:
-                s = reuse[role]
-                self.groups[role].summary = s
-                self.summaries[role] = s
-                self.migrations += s.n_overflowed
-                self.escalations += s.n_escalated
-                self.handoffs += s.n_handoffs
-                for dest, snaps in s.outbox.items():
-                    if dest not in reuse:   # flow into a reused pool is
-                        inbox[dest].extend(  # already inside its snapshot
-                            copy.copy(r) for r in snaps)
-                continue
-            self.fresh_roles.append(role)
-            grp = self.groups[role]
-            eng = grp.engine
-            if inbox[role]:
-                for r in sorted(inbox[role], key=lambda r: r.ready_time):
-                    grp.submit(r)
-                inbox[role] = []
-            eng.sort_queues()       # keep queues time-sorted for the
-            eng.run_until_drained(max_iters=max_iters)  # head-gated admission
-            outbox: Dict[str, List[Request]] = {}
-            n_over = n_esc = n_hand = 0
-            for i in range(eng.instances):
-                if eng.overflowed[i]:
-                    dest = self.overflow_to.get(role)
-                    assert dest is not None, \
-                        "the terminal pool may not overflow-evict"
-                    n_over += len(eng.overflowed[i])
-                    inbox[dest].extend(eng.overflowed[i])
-                    outbox.setdefault(dest, []).extend(
-                        copy.copy(r) for r in eng.overflowed[i])
-                    eng.overflowed[i] = []
-                if eng.escalated[i]:
-                    dest = self.escalate_to.get(role)
-                    assert dest is not None, \
-                        "only the semantic small pool may escalate"
-                    n_esc += len(eng.escalated[i])
-                    inbox[dest].extend(eng.escalated[i])
-                    outbox.setdefault(dest, []).extend(
-                        copy.copy(r) for r in eng.escalated[i])
-                    eng.escalated[i] = []
-                if eng.handoff[i]:
-                    dest = self.handoff_to[role]
-                    kappa = self._kv_bytes_per_tok[role]
-                    for r in eng.handoff[i]:
-                        n_bytes = kappa * r.prompt_len
-                        delay = n_bytes / self.kv_interconnect_Bps
-                        eng.bank.charge_handoff_one(
-                            i, n_bytes, start_s=r.ready_time,
-                            duration_s=delay,
-                            j_per_byte=self.kv_handoff_j_per_byte)
-                        r.ready_time += delay
-                        r.prefill_role = role
-                    n_hand += len(eng.handoff[i])
-                    inbox[dest].extend(eng.handoff[i])
-                    outbox.setdefault(dest, []).extend(
-                        copy.copy(r) for r in eng.handoff[i])
-                    eng.handoff[i] = []
-            self.migrations += n_over
-            self.escalations += n_esc
-            self.handoffs += n_hand
-            self.summaries[role] = grp.summarize(role_idx, outbox,
-                                                 n_over, n_esc, n_hand)
-        assert not any(inbox.values()), "undelivered cross-pool requests"
+        self._run_state = dict(
+            reuse=reuse or {},
+            role_idx={r: k for k, r in enumerate(self.order)},
+            inbox={role: [] for role in self.order})
+
+    def pre_role(self, role: str) -> Optional[BatchedPoolEngine]:
+        """Inject the role's inbox and time-sort its queues; returns the
+        engine about to drain (None when the role replays a reused
+        snapshot).  Split from `drain_role` so a grid driver can collect a
+        stage's prepared engines and batch their drains."""
+        rs = self._run_state
+        if role in rs["reuse"]:
+            return None
+        grp = self.groups[role]
+        inbox = rs["inbox"]
+        if inbox[role]:
+            for r in sorted(inbox[role], key=lambda r: r.ready_time):
+                grp.submit(r)
+            inbox[role] = []
+        grp.engine.sort_queues()    # keep queues time-sorted for the
+        return grp.engine           # head-gated admission
+
+    def drain_role(self, role: str, *,
+                   max_iters: int = 20_000_000) -> None:
+        """Drain one prepared pool (or adopt its reused snapshot) and
+        deliver its outflow to the downstream inboxes."""
+        rs = self._run_state
+        reuse, inbox = rs["reuse"], rs["inbox"]
+        if role in reuse:
+            s = reuse[role]
+            self.groups[role].summary = s
+            self.summaries[role] = s
+            self.migrations += s.n_overflowed
+            self.escalations += s.n_escalated
+            self.handoffs += s.n_handoffs
+            for dest, snaps in s.outbox.items():
+                if dest not in reuse:   # flow into a reused pool is
+                    inbox[dest].extend(  # already inside its snapshot
+                        copy.copy(r) for r in snaps)
+            return
+        self.fresh_roles.append(role)
+        grp = self.groups[role]
+        eng = grp.engine
+        eng.run_until_drained(max_iters=max_iters)
+        outbox: Dict[str, List[Request]] = {}
+        n_over = n_esc = n_hand = 0
+        for i in range(eng.instances):
+            if eng.overflowed[i]:
+                dest = self.overflow_to.get(role)
+                assert dest is not None, \
+                    "the terminal pool may not overflow-evict"
+                n_over += len(eng.overflowed[i])
+                inbox[dest].extend(eng.overflowed[i])
+                outbox.setdefault(dest, []).extend(
+                    copy.copy(r) for r in eng.overflowed[i])
+                eng.overflowed[i] = []
+            if eng.escalated[i]:
+                dest = self.escalate_to.get(role)
+                assert dest is not None, \
+                    "only the semantic small pool may escalate"
+                n_esc += len(eng.escalated[i])
+                inbox[dest].extend(eng.escalated[i])
+                outbox.setdefault(dest, []).extend(
+                    copy.copy(r) for r in eng.escalated[i])
+                eng.escalated[i] = []
+            if eng.handoff[i]:
+                dest = self.handoff_to[role]
+                kappa = self._kv_bytes_per_tok[role]
+                for r in eng.handoff[i]:
+                    n_bytes = kappa * r.prompt_len
+                    delay = n_bytes / self.kv_interconnect_Bps
+                    eng.bank.charge_handoff_one(
+                        i, n_bytes, start_s=r.ready_time,
+                        duration_s=delay,
+                        j_per_byte=self.kv_handoff_j_per_byte)
+                    r.ready_time += delay
+                    r.prefill_role = role
+                n_hand += len(eng.handoff[i])
+                inbox[dest].extend(eng.handoff[i])
+                outbox.setdefault(dest, []).extend(
+                    copy.copy(r) for r in eng.handoff[i])
+                eng.handoff[i] = []
+        self.migrations += n_over
+        self.escalations += n_esc
+        self.handoffs += n_hand
+        self.summaries[role] = grp.summarize(rs["role_idx"], outbox,
+                                             n_over, n_esc, n_hand)
+
+    def finish_run(self) -> Dict[str, dict]:
+        assert not any(self._run_state["inbox"].values()), \
+            "undelivered cross-pool requests"
         # a prefill pool's latency snapshot was taken at its drain, before
         # the downstream decode pool filled in its relayed requests'
         # finish/TPOT — refresh those percentiles now that the whole
@@ -804,6 +852,56 @@ class SimVsAnalytical:
                     migrations=f["migrations"])
 
 
+def prepare_topology(kind: str, workload: Workload, profile: BaseProfile,
+                     model: ModelSpec, *, b_short: int = 4096,
+                     gamma: float = 2.0,
+                     n_requests: int = 4000, seed: int = 0,
+                     arrival_rate: Optional[float] = None,
+                     prefill_chunk: int = 512,
+                     windows: Optional[Sequence[int]] = None,
+                     pool_overrides: Optional[Dict[str, PoolOverride]] = None,
+                     small_model: Optional[ModelSpec] = None,
+                     small_profile: Optional[BaseProfile] = None,
+                     misroute_rate: float = 0.0,
+                     dispatch_ms: float = 0.0,
+                     long_window: int = LONG_WINDOW,
+                     engine: str = "numpy"):
+    """Provision a topology analytically and synthesise its trace; returns
+    `(sim, reqs, plan)` ready for `sim.run(reqs)` — the common front half of
+    `simulate_topology`, split out so the grid driver can prepare many
+    scenarios before batch-draining them."""
+    if arrival_rate is not None and arrival_rate != workload.arrival_rate:
+        workload = dataclasses.replace(workload, arrival_rate=arrival_rate)
+    if kind == "multipool" and windows:
+        long_window = int(max(windows))
+    policy, plan, registry = build_topology(
+        kind, workload, profile, model, b_short=b_short, gamma=gamma,
+        long_window=long_window, windows=windows,
+        pool_overrides=pool_overrides, small_model=small_model,
+        small_profile=small_profile, misroute_rate=misroute_rate,
+        dispatch_ms=dispatch_ms, misroute_seed=seed)
+    sim = FleetSim(policy, plan, registry=registry,
+                   prefill_chunk=prefill_chunk, rng_seed=seed,
+                   engine=engine)
+    sim.workload_name = workload.name     # grid-driver report labels
+    sim.topology_kind = kind
+    reqs = trace_requests(workload, n_requests, seed=seed,
+                          max_total=long_window)
+    return sim, reqs, plan
+
+
+def _sim_vs_analytical(sim: FleetSim, plan, kind: str,
+                       workload_name: str,
+                       report: Dict[str, dict]) -> SimVsAnalytical:
+    return SimVsAnalytical(
+        workload=workload_name, topology=kind,
+        analytical_tok_per_watt=analytical_decode_tok_per_watt(plan),
+        analytical_fleet_tok_per_watt=plan.tok_per_watt,
+        sim_tok_per_watt=report["fleet"]["tok_per_watt"],
+        sim_decode_tok_per_watt=report["fleet"]["decode_tok_per_watt"],
+        report=report)
+
+
 def simulate_topology(kind: str, workload: Workload, profile: BaseProfile,
                       model: ModelSpec, *, b_short: int = 4096,
                       gamma: float = 2.0,
@@ -816,27 +914,61 @@ def simulate_topology(kind: str, workload: Workload, profile: BaseProfile,
                       small_profile: Optional[BaseProfile] = None,
                       misroute_rate: float = 0.0,
                       dispatch_ms: float = 0.0,
-                      long_window: int = LONG_WINDOW) -> SimVsAnalytical:
-    """Provision a topology analytically, then measure it end-to-end."""
-    if arrival_rate is not None and arrival_rate != workload.arrival_rate:
-        workload = dataclasses.replace(workload, arrival_rate=arrival_rate)
-    if kind == "multipool" and windows:
-        long_window = int(max(windows))
-    policy, plan, registry = build_topology(
+                      long_window: int = LONG_WINDOW,
+                      engine: str = "numpy") -> SimVsAnalytical:
+    """Provision a topology analytically, then measure it end-to-end.
+    `engine="jax"` opts the pools into the jit/vmap drain loop
+    (serving.jax_engine); the default numpy engine is the bit-exact
+    oracle."""
+    sim, reqs, plan = prepare_topology(
         kind, workload, profile, model, b_short=b_short, gamma=gamma,
-        long_window=long_window, windows=windows,
+        n_requests=n_requests, seed=seed, arrival_rate=arrival_rate,
+        prefill_chunk=prefill_chunk, windows=windows,
         pool_overrides=pool_overrides, small_model=small_model,
         small_profile=small_profile, misroute_rate=misroute_rate,
-        dispatch_ms=dispatch_ms, misroute_seed=seed)
-    sim = FleetSim(policy, plan, registry=registry,
-                   prefill_chunk=prefill_chunk, rng_seed=seed)
-    reqs = trace_requests(workload, n_requests, seed=seed,
-                          max_total=long_window)
+        dispatch_ms=dispatch_ms, long_window=long_window, engine=engine)
     report = sim.run(reqs)
-    return SimVsAnalytical(
-        workload=workload.name, topology=kind,
-        analytical_tok_per_watt=analytical_decode_tok_per_watt(plan),
-        analytical_fleet_tok_per_watt=plan.tok_per_watt,
-        sim_tok_per_watt=report["fleet"]["tok_per_watt"],
-        sim_decode_tok_per_watt=report["fleet"]["decode_tok_per_watt"],
-        report=report)
+    return _sim_vs_analytical(sim, plan, kind, workload.name, report)
+
+
+def run_fleet_grid(scenarios: List[Tuple[FleetSim, List[Request], object]],
+                   *, max_iters: int = 20_000_000,
+                   warmup_frac: float = 0.35,
+                   pad_floors: Optional[Sequence[tuple]] = None
+                   ) -> List[SimVsAnalytical]:
+    """Drain many prepared scenarios stage-by-stage so each topological
+    stage's JAX pools compile and drain as **one** vmapped call.
+
+    `scenarios` is a list of `prepare_topology(...)` triples (every sim
+    built with `engine="jax"`; numpy sims also work — they just drain
+    serially inside the stage loop).  Stage k collects the k-th pool of
+    every scenario, batch-drains the JAX ones via
+    `jax_engine.drain_engines`, then lets each sim finish its per-stage
+    bookkeeping (outbox routing, KV-handoff charging, summaries) on the
+    host exactly as `FleetSim.run` would.  `pad_floors` forwards shape
+    classes to `drain_engines` so sweeps spanning many pool geometries
+    share a handful of compiled programs."""
+    from .jax_engine import JaxPoolEngine, drain_engines
+    for sim, reqs, _ in scenarios:
+        sim.begin_run(reqs, warmup_frac=warmup_frac)
+    n_stages = max(len(sim.order) for sim, _, _ in scenarios)
+    for k in range(n_stages):
+        staged = []
+        for sim, _, _ in scenarios:
+            if k >= len(sim.order):
+                continue
+            eng = sim.pre_role(sim.order[k])
+            if isinstance(eng, JaxPoolEngine):
+                staged.append(eng)
+        if staged:
+            drain_engines(staged, max_iters=max_iters,
+                          pad_floors=pad_floors)
+        for sim, _, _ in scenarios:
+            if k < len(sim.order):
+                sim.drain_role(sim.order[k], max_iters=max_iters)
+    out = []
+    for sim, _, plan in scenarios:
+        report = sim.finish_run()
+        out.append(_sim_vs_analytical(
+            sim, plan, sim.topology_kind, sim.workload_name, report))
+    return out

@@ -168,6 +168,10 @@ class ContextRouter:
 
     def run(self, requests: List[Request], *, max_iters: int = 100_000
             ) -> Dict[str, dict]:
+        """Route every request, drain every pool, report.  A pool that is
+        still busy at `max_iters` raises `serving.DrainTruncatedError`
+        (propagated, never swallowed): a truncated drain would roll
+        under-counted tokens/energy straight into the fleet tok/W."""
         for r in requests:
             self.route(r)
         for eng in self.pools.values():

@@ -46,7 +46,8 @@ from repro.core.fleet import PREFILL_MFU
 from repro.core.profiles import BaseProfile
 
 from .energy import MeterBank
-from .engine import _LCG_A, _LCG_C, _NEVER
+from .engine import (_LCG_A, _LCG_C, _NEVER, DrainTruncatedError,
+                     resolve_prefill_chunk)
 from .request import Request
 
 
@@ -77,9 +78,8 @@ class BatchedPoolEngine:
         self.n_slots = n_slots if n_slots is not None \
             else max(profile.n_max(window), 1)
         self.phase = phase
-        if not prefill_chunk and phase == "prefill":
-            prefill_chunk = 512      # same fallback as the scalar engine
-        self.prefill_chunk = prefill_chunk
+        self.prefill_chunk = resolve_prefill_chunk(profile, prefill_chunk,
+                                                   phase)
         self.prefill_mfu = PREFILL_MFU if prefill_mfu is None else prefill_mfu
         self.evict_on_overflow = evict_on_overflow
         self.respect_arrival = respect_arrival
@@ -447,6 +447,12 @@ class BatchedPoolEngine:
             if not self._step_all():
                 break
             it += 1
+        if self.busy:
+            qleft = sum(len(q) - int(p)
+                        for q, p in zip(self.queues, self.qpos))
+            raise DrainTruncatedError(
+                self.name, max_iters,
+                f"{qleft} queued, {int(self._active.sum())} in flight")
 
     # --- aggregates -----------------------------------------------------
 

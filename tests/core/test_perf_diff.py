@@ -1,0 +1,52 @@
+"""The perf gate's wall-clock budget must carry an absolute grace floor:
+sub-second bench totals are start-up jitter, not simulator regressions,
+so a tiny run may never trip (or hide behind) the ratio gate."""
+import importlib.util
+import json
+import os
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+_spec = importlib.util.spec_from_file_location(
+    "perf_diff", os.path.join(ROOT, "benchmarks", "perf_diff.py"))
+perf_diff = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(perf_diff)
+
+
+def _dump(tmp_path, name, wall_s):
+    cfg = dict(quick=True, n_requests=1000)
+    p = tmp_path / name
+    p.write_text(json.dumps(dict(timings=[
+        dict(table="a", config=cfg, wall_s=wall_s * 0.25),
+        dict(table="total", config=cfg, wall_s=wall_s)])))
+    return str(p)
+
+
+def test_wall_floor_forgives_tiny_runs(tmp_path):
+    """3x over budget but under the 2 s floor: jitter, not regression."""
+    base = _dump(tmp_path, "base.json", 0.3)
+    cur = _dump(tmp_path, "cur.json", 0.9)
+    rep = perf_diff.wall_budget_diff(base, cur, budget=1.5)
+    assert rep["ratio"] == pytest.approx(3.0)
+    assert rep["under_floor"] and rep["ok"]
+
+
+def test_wall_budget_still_trips_above_floor(tmp_path):
+    base = _dump(tmp_path, "base.json", 20.0)
+    cur = _dump(tmp_path, "cur.json", 40.0)
+    rep = perf_diff.wall_budget_diff(base, cur, budget=1.5)
+    assert not rep["under_floor"]
+    assert not rep["ok"]
+    # and an in-budget run above the floor passes on ratio, not grace
+    ok = perf_diff.wall_budget_diff(base, _dump(tmp_path, "c2.json", 22.0),
+                                    budget=1.5)
+    assert ok["ok"] and not ok["under_floor"]
+
+
+def test_wall_floor_is_tunable(tmp_path):
+    base = _dump(tmp_path, "base.json", 0.3)
+    cur = _dump(tmp_path, "cur.json", 0.9)
+    rep = perf_diff.wall_budget_diff(base, cur, budget=1.5, floor_s=0.5)
+    assert not rep["ok"]

@@ -1,0 +1,259 @@
+"""JAX-engine parity: the jit/vmap drain loop (serving.jax_engine) must
+reproduce the numpy `BatchedPoolEngine` oracle — admission order, chunked
+prefill interleave, window-ceiling eviction, escalation backout, the
+prefill-phase FIFO, every meter counter, and the per-request event record
+(finish/first-token times, preemption counts, outbox order).
+
+The contract is float-parity, not bit-parity: masked-lane arithmetic adds
+exactly +0.0 so almost every path is bit-identical, but multi-slot chunk
+spills accumulate in a different association order on device
+(ulp-level).  The acceptance gate is rtol=1e-9 on meters and exact
+equality on every integer/ordering field; the numpy engine keeps its
+bit-exact parity contract against the scalar engines untouched
+(tests/serving/test_soa_parity.py).
+"""
+import copy
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.core.modelspec import LLAMA31_70B
+from repro.core.profiles import B200_LLAMA70B, H100_LLAMA70B
+from repro.core.workloads import AZURE
+from repro.serving import BatchedPoolEngine, Request
+from repro.serving.jax_engine import JaxPoolEngine, drain_engines
+
+STREAMED = LLAMA31_70B.streamed_params
+
+
+def _req(rid, plen, out, t=0.0, pred=None, esc=None, pdone=False):
+    r = Request(rid=rid, prompt=np.broadcast_to(np.int64(0), (plen,)),
+                max_new_tokens=out, arrival_time=t, predicted_output=pred)
+    r.escalate_at = esc
+    r.prefill_done = pdone
+    if pdone:
+        r.ready_time = t
+        r.generated = [7]
+    return r
+
+
+def _mk(cls, reqs_by_inst, *, profile=H100_LLAMA70B, **kw):
+    eng = cls(instances=len(reqs_by_inst), profile=profile,
+              streamed_params=STREAMED, rng_seed=11, name="p",
+              respect_arrival=True, **kw)
+    for j, reqs in enumerate(reqs_by_inst):
+        for r in reqs:
+            eng.submit(copy.copy(r), j)
+    eng.sort_queues()
+    return eng
+
+
+def _run_both(reqs_by_inst, **kw):
+    """The same per-instance streams through the numpy oracle and the JAX
+    engine (identical construction)."""
+    ref = _mk(BatchedPoolEngine, reqs_by_inst, **kw)
+    jx = _mk(JaxPoolEngine, reqs_by_inst, **kw)
+    ref.run_until_drained(max_iters=200_000)
+    jx.run_until_drained(max_iters=200_000)
+    return ref, jx
+
+
+def _assert_parity(ref, jx, rtol=1e-9):
+    b, c = ref.bank, jx.bank
+    for k in ("joules", "m_joules", "prefill_joules", "m_prefill_joules",
+              "idle_joules", "m_idle_joules", "dispatch_joules",
+              "m_dispatch_joules", "sim_time_s"):
+        np.testing.assert_allclose(getattr(c, k), getattr(b, k),
+                                   rtol=rtol, atol=1e-12, err_msg=k)
+    for k in ("tokens", "m_tokens", "prefill_tokens"):
+        np.testing.assert_array_equal(getattr(c, k), getattr(b, k),
+                                      err_msg=k)
+    np.testing.assert_allclose(jx.slot_seconds, ref.slot_seconds,
+                               rtol=rtol, atol=1e-12)
+    np.testing.assert_allclose(jx.m_slot_seconds, ref.m_slot_seconds,
+                               rtol=rtol, atol=1e-12)
+    np.testing.assert_array_equal(jx.preempted, ref.preempted)
+    np.testing.assert_array_equal(jx.n_escalated, ref.n_escalated)
+    for field in ("completed", "overflowed", "escalated", "relayed",
+                  "handoff"):
+        for j in range(ref.instances):
+            sa = getattr(ref, field)[j]
+            sb = getattr(jx, field)[j]
+            assert [r.rid for r in sa] == [r.rid for r in sb], (field, j)
+            for ra, rb in zip(sa, sb):
+                assert ra.n_generated == rb.n_generated, (field, ra.rid)
+                assert ra.preemptions == rb.preemptions, (field, ra.rid)
+                assert ra.escalations == rb.escalations, (field, ra.rid)
+                assert ra.prefill_done == rb.prefill_done, (field, ra.rid)
+                assert (ra.generated is None) == (rb.generated is None)
+                if ra.generated is not None:
+                    assert ra.generated == rb.generated, (field, ra.rid)
+                for tk in ("finish_time", "first_token_time"):
+                    ta, tb = getattr(ra, tk), getattr(rb, tk)
+                    assert ta == pytest.approx(tb, rel=rtol, abs=1e-12), \
+                        (field, ra.rid, tk)
+                if ra.ready_time is None:
+                    assert rb.ready_time is None, (field, ra.rid)
+                else:
+                    assert ra.ready_time == pytest.approx(
+                        rb.ready_time, rel=rtol, abs=1e-12), (field, ra.rid)
+
+
+def test_jax_parity_admission_and_chunked_interleave():
+    rng = np.random.default_rng(3)
+    reqs = [[_req(i + 100 * j, int(rng.integers(1, 3000)),
+                  int(rng.integers(1, 150)), t=0.04 * i)
+             for i in range(40)] for j in range(3)]
+    _assert_parity(*_run_both(reqs, window=4096, n_slots=4,
+                              prefill_chunk=256))
+
+
+def test_jax_parity_window_ceiling_overflow_chain():
+    reqs = [[_req(j * 50, 100, 5000)] +
+            [_req(j * 50 + 1 + i, 40, 30, t=0.01 * i) for i in range(12)]
+            for j in range(2)]
+    ref, jx = _run_both(reqs, window=256, n_slots=2, prefill_chunk=128,
+                        evict_on_overflow=True)
+    _assert_parity(ref, jx)
+    assert all(len(o) > 0 for o in jx.overflowed)
+
+
+def test_jax_parity_escalation_backout_in_window():
+    """Escalations *inside* the measurement window: the windowed m_*
+    counters must back out exactly what the numpy oracle backs out."""
+    reqs = [[_req(i, 64, 400, esc=6, t=0.05 * i) for i in range(5)]
+            for _ in range(2)]
+    ref = _mk(BatchedPoolEngine, reqs, window=8192, n_slots=2,
+              prefill_chunk=128)
+    jx = _mk(JaxPoolEngine, reqs, window=8192, n_slots=2,
+             prefill_chunk=128)
+    for e in (ref, jx):                   # window opens mid-run
+        e.bank.measure_t0, e.bank.measure_t1 = 0.1, 1e9
+    ref.run_until_drained(max_iters=200_000)
+    jx.run_until_drained(max_iters=200_000)
+    _assert_parity(ref, jx)
+    assert int(jx.n_escalated.sum()) == 10
+
+
+def test_jax_parity_prefill_phase_fifo():
+    rng = np.random.default_rng(9)
+    reqs = [[_req(i + 30 * j, int(rng.integers(64, 7000)), 1, t=0.03 * i)
+             for i in range(25)] for j in range(2)]
+    ref, jx = _run_both(reqs, window=8192, n_slots=4, prefill_chunk=512,
+                        phase="prefill")
+    _assert_parity(ref, jx)
+    assert all(len(h) > 0 for h in jx.handoff)
+    # handoff first tokens are live LCG values, not placeholders
+    for j in range(jx.instances):
+        for ra, rb in zip(ref.handoff[j], jx.handoff[j]):
+            assert ra.generated == rb.generated
+
+
+def test_jax_parity_prefilled_admission_and_dispatch():
+    """disagg decode admission (prefill_done: no prefill charge) plus a
+    per-step MoE dispatch floor."""
+    pdone = [[_req(i, 128, 20, t=0.01 * i, pdone=True) for i in range(8)]
+             for _ in range(2)]
+    _assert_parity(*_run_both(pdone, window=4096, n_slots=2,
+                              prefill_chunk=256, dispatch_ms=2.0))
+
+
+def test_jax_unchunked_decode_unsupported():
+    """The unchunked immediate-prefill admission path advances the clock
+    mid-admission — explicitly out of the JAX engine's contract."""
+    with pytest.raises(NotImplementedError):
+        JaxPoolEngine(instances=1, window=4096, profile=H100_LLAMA70B,
+                      streamed_params=STREAMED, prefill_chunk=0)
+
+
+def test_drain_engines_ragged_batch():
+    """One `drain_engines` call over engines with different instance
+    counts, slot counts, queue lengths, profiles and phases must equal
+    each engine drained alone by the numpy oracle — the padding masks may
+    not leak work into (or out of) dead rows."""
+    rng = np.random.default_rng(17)
+
+    def mkstreams(n_inst, n, stride):
+        return [[_req(1000 * stride + i + 100 * j,
+                      int(rng.integers(1, 2000)),
+                      int(rng.integers(1, 80)), t=0.05 * i)
+                 for i in range(n)] for j in range(n_inst)]
+
+    cfgs = [dict(window=4096, n_slots=4, prefill_chunk=256),
+            dict(window=2048, n_slots=2, prefill_chunk=128,
+                 evict_on_overflow=True),
+            dict(window=8192, n_slots=3, prefill_chunk=512,
+                 phase="prefill")]
+    profiles = [H100_LLAMA70B, B200_LLAMA70B, H100_LLAMA70B]
+    streams = [mkstreams(1, 30, 0), mkstreams(3, 7, 1), mkstreams(2, 18, 2)]
+    refs = [_mk(BatchedPoolEngine, s, profile=p, **c)
+            for s, p, c in zip(streams, profiles, cfgs)]
+    jxs = [_mk(JaxPoolEngine, s, profile=p, **c)
+           for s, p, c in zip(streams, profiles, cfgs)]
+    for e in refs:
+        e.run_until_drained(max_iters=200_000)
+    drain_engines(jxs, max_iters=200_000)
+    for e in jxs:
+        e.run_until_drained(max_iters=200_000)   # consumes staged result
+    for ref, jx in zip(refs, jxs):
+        _assert_parity(ref, jx)
+
+
+def test_jax_fleet_matches_numpy_fleet_seed_numbers():
+    """End-to-end anchor: `simulate_topology(engine="jax")` reproduces the
+    numpy fleet's committed seed cell (Azure fleetopt, 1000 requests,
+    seed 0) to the rounding the baseline records."""
+    from repro.serving import simulate_topology
+    cell = simulate_topology("fleetopt", AZURE, H100_LLAMA70B, LLAMA31_70B,
+                             b_short=4096, n_requests=1000, seed=0,
+                             engine="jax")
+    f = cell.report["fleet"]
+    assert f["completed"] == 1000
+    assert round(cell.sim_decode_tok_per_watt, 2) == 5.66
+    assert round(cell.sim_tok_per_watt, 2) == 1.81
+
+
+# --- property test: random streams, numpy oracle vs JAX ------------------
+
+try:
+    import hypothesis  # noqa: F401
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    request_lists = st.lists(
+        st.tuples(st.integers(1, 2000),     # prompt len
+                  st.integers(1, 120),      # output len
+                  st.floats(0.0, 2.0),      # inter-arrival gap
+                  st.sampled_from([None, None, 4, 16])),  # escalate_at
+        min_size=1, max_size=25)
+
+    @settings(max_examples=15, deadline=None)
+    @given(streams=st.lists(request_lists, min_size=1, max_size=3),
+           n_slots=st.integers(1, 4),
+           chunk=st.sampled_from([64, 256]),   # 0 = unchunked: unsupported
+           window=st.sampled_from([512, 4096]),
+           evict=st.booleans())
+    def test_property_numpy_and_jax_step_identically(
+            streams, n_slots, chunk, window, evict):
+        rid = 0
+        reqs_by_inst = []
+        for stream in streams:
+            t = 0.0
+            reqs = []
+            for plen, out, gap, esc in stream:
+                t += gap
+                reqs.append(_req(rid, plen, out, t=t, esc=esc))
+                rid += 1
+            reqs_by_inst.append(reqs)
+        ref, jx = _run_both(reqs_by_inst, window=window, n_slots=n_slots,
+                            prefill_chunk=chunk, evict_on_overflow=evict)
+        _assert_parity(ref, jx)
+else:                                                  # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed (requirements-dev)")
+    def test_property_numpy_and_jax_step_identically():
+        pass
