@@ -1,4 +1,5 @@
 """Serving-engine step timing + simulated fleet tok/W on the CPU demo."""
+import math
 import time
 
 import jax
@@ -35,8 +36,9 @@ def run():
                             n_slots=8, name="short"),
         "long": PoolEngine(cfg, params, window=128, profile=H100_LLAMA70B,
                            n_slots=2, name="long")}
-    router = ContextRouter(pools, RouterPolicy(kind="fleetopt", b_short=16,
-                                               gamma=2.0))
+    router = ContextRouter(pools, RouterPolicy(
+        kind="fleetopt", b_short=16, gamma=2.0,
+        ladder=[("short", 32.0), ("long", math.inf)]))
     reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab,
                                                6 if i % 4 else 90),
                     max_new_tokens=6) for i in range(12)]

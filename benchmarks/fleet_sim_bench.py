@@ -154,13 +154,15 @@ def table_d(workloads, *, n_requests: int, slo_requests: int, seed: int,
     return rows
 
 
+# per-kind bench arguments (kind *behaviour* lives in
+# core.topospec.TopologySpec.from_kind; this is just argument selection)
+_SLO_CELL_KW = {"multipool": lambda: dict(windows=ladder_windows(K_POOLS))}
+
+
 def _slo_cell(kind: str, profile, *, n_requests: int, seed: int,
               engine: str = "numpy"):
-    kw = {}
-    if kind == "multipool":
-        kw["windows"] = ladder_windows(K_POOLS)
-    else:
-        kw["b_short"] = B_SHORT[AZURE.name]
+    kw = _SLO_CELL_KW.get(
+        kind, lambda: dict(b_short=B_SHORT[AZURE.name]))()
     return size_to_slo(kind, AZURE, profile, LLAMA31_70B,
                        n_requests=n_requests, seed=seed, engine=engine, **kw)
 

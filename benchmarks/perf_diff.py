@@ -25,9 +25,12 @@ Two modes:
    `benchmarks/run.py` writes.  A cell is keyed by
    (table, generation, workload, topology, dispatch_ms, misroute_rate) —
    the last two disambiguate the model-heterogeneous Table D sweep cells
-   and are empty for every other row; its metric is the row's primary
-   tok/W field (`simulated` for measured tables, `slo_feasible` for SLO
-   tables; both when a row carries both).
+   and are empty for every other row — plus the row's `spec_hash` when it
+   carries one (searched-fleet rows from topology_search_bench.py: the
+   stable TopologySpec hash keeps two different searched topologies from
+   colliding in one cell); its metric is the row's primary tok/W field
+   (`simulated` for measured tables, `slo_feasible` for SLO tables; both
+   when a row carries both).
 
 3. Wall-clock budget gate (CI, alongside --fleet): diff the bench's
    timing dump (`fleet_sim_bench.py --time`, rows of
@@ -87,6 +90,11 @@ def _fleet_cells(path: str) -> dict:
         key = "/".join(str(r.get(k, "")) for k in
                        ("table", "generation", "workload", "topology",
                         "dispatch_ms", "misroute_rate"))
+        # searched-fleet rows (benchmarks/topology_search_bench.py) carry
+        # a TopologySpec hash: two different searched topologies must
+        # never collapse into one diff cell
+        if r.get("spec_hash"):
+            key += "/" + str(r["spec_hash"])
         present = [f for f in _METRIC_FIELDS[:2] if f in r]
         if not present and _METRIC_FIELDS[2] in r:
             present = [_METRIC_FIELDS[2]]

@@ -19,7 +19,7 @@ def _suites():
                    table1_context_law, table2_model_archs,
                    table3_fleet_topology, table4_semantic_routing,
                    table5_gpu_generations, table6_archetypes,
-                   table7_power_params)
+                   table7_power_params, topology_search_bench)
     return {
         # harness_run also records the full-run wall-clock trajectory to
         # results/BENCH_fleet_sim_full.json (the committed quick-config
@@ -29,6 +29,10 @@ def _suites():
         "fleet_sim": fleet_sim_bench.harness_run,
         # Table E sensitivity surface; self-skips on numpy-only hosts
         "fleet_grid": fleet_grid_bench.harness_run,
+        # searched vs hand-built TopologySpec fleets (optimize_topology);
+        # the committed --quick baseline results/topology_search.json is
+        # likewise refreshed only by a deliberate bench --quick --json run
+        "topology_search": topology_search_bench.harness_run,
         "table1_context_law": table1_context_law.run,
         "table2_model_archs": table2_model_archs.run,
         "table3_fleet_topology": table3_fleet_topology.run,

@@ -12,6 +12,8 @@ Public API surface (see DESIGN.md §2):
   fleet      — Little's-law fleet sizing (+ PoolOverride recalibration)
   routing    — Homo / TwoPool / FleetOpt / Semantic topologies
   multipool  — K >= 3 geometric window ladders (§10.3)
+  topospec   — declarative topology IR (TopologySpec / PoolSpec)
+  topo_search — tok/W-maximizing topology search over the IR
   slo        — SLO-constrained sizing loop (measured TTFT p99 authority)
   law        — 1/W-law fits + gain decomposition
   moe        — active-parameter streaming + dispatch sensitivity
@@ -19,13 +21,16 @@ Public API surface (see DESIGN.md §2):
 """
 from . import (adaptive, analyzer, carbon, disagg, fleet, hardware, kvcache,
                law, modelspec, moe, multipool, power, profiles, roofline,
-               routing, slo, speculative, tokenomics, workloads)
+               routing, slo, speculative, tokenomics, topo_search, topospec,
+               workloads)
 from .adaptive import AdaptiveController
 from .carbon import GRIDS, EnergyBill, GridProfile, bill
 from .disagg import Disaggregated
 from .fleet import PoolOverride
 from .multipool import MultiPool, ladder_windows, sweep_pool_counts
-from .slo import SLOSizingResult, SLOSpec, size_to_slo
+from .slo import SLOSizingResult, SLOSpec, size_to_slo, size_to_slo_spec
+from .topo_search import TopologySearchResult, ladder_spec, optimize_topology
+from .topospec import SEMANTIC_KINDS, PoolSpec, TopologySpec, plan_roles
 from .speculative import speculative_tok_per_watt
 from .analyzer import FleetAnalysis, fleet_tpw_analysis
 from .hardware import B200, GB200, H100, H200, TPU_V5E, ChipSpec

@@ -63,6 +63,11 @@ class PoolSizing:
     # physical MFU the prefill-phase *engines* run at (serving.fleetsim);
     # immutable under SLO recalibration, which only moves the sizing MFU.
     prefill_engine_mfu: Optional[float] = None
+    # router role this pool serves, stamped by the TopologySpec IR
+    # (core.topospec) at provision time — the single source every layer
+    # (FleetSim wiring, SLO attribution, override application) reads role
+    # names from; "" means the pool was built outside the IR.
+    role: str = ""
     # computed:
     instances: int = 0
     n_active: float = 0.0

@@ -7,7 +7,7 @@ actually run through `serving.fleetsim` — Table 3's tok/W numbers were
 quoted for fleets that don't meet their own SLO.  This module closes the
 predict-vs-measure loop (the TokenPowerBench-style validation posture):
 
-  1. provision a topology analytically (`serving.fleetsim.build_topology`);
+  1. provision a topology analytically (`core.topospec.TopologySpec.build`);
   2. *measure* its TTFT p99 by running the fleet end-to-end in FleetSim;
   3. while the measurement violates the SLO, recalibrate the violating
      pools — lower their effective prefill MFU (which raises the
@@ -50,6 +50,7 @@ from typing import Dict, List, Optional, Sequence
 from .fleet import PREFILL_MFU, FleetReport, PoolOverride
 from .modelspec import ModelSpec
 from .profiles import BaseProfile
+from .topospec import TopologySpec, plan_roles
 from .workloads import Workload
 
 # per-round backoff clamps: the capacity step is driven by the *fleet*
@@ -213,33 +214,30 @@ class _FleetMeasurer:
 
     `stats` carries the audit counts `size_to_slo` exposes as
     `SLOSizingResult.sim_stats`.
+
+    The measurer is keyed on a `TopologySpec` (the IR is the single
+    provisioning authority — `spec.build` replaces the old kind-string
+    `build_topology` plumbing), and the frozen trace can be *injected*
+    (`trace=`): the topology search (`core.topo_search`) sizes many
+    candidate specs against one shared trace, so candidate scores differ
+    only in topology, never in arrival noise.
     """
 
-    def __init__(self, kind: str, workload: Workload, profile: BaseProfile,
-                 model: ModelSpec, *, b_short: int, gamma: float,
-                 windows: Optional[Sequence[int]], long_window: int,
+    def __init__(self, spec: TopologySpec, workload: Workload, *,
                  n_requests: int, seed: int, prefill_chunk: int,
-                 small_model: Optional[ModelSpec],
-                 small_profile: Optional[BaseProfile],
-                 misroute_rate: float, dispatch_ms: float,
-                 engine: str = "numpy"):
+                 engine: str = "numpy", trace=None):
         # serving imports are lazy: core stays importable without the
         # serving layer, and the serving layer itself imports core.fleet
         from repro.serving import fleetsim as _fs
         from repro.serving.request import sample_trace
         self._fs = _fs
-        self.kind, self.workload = kind, workload
-        self.profile, self.model = profile, model
-        self.b_short, self.gamma = b_short, gamma
-        self.windows, self.long_window = windows, long_window
+        self.spec, self.workload = spec, workload
         self.n_requests, self.seed = n_requests, seed
         self.prefill_chunk = prefill_chunk
-        self.small_model, self.small_profile = small_model, small_profile
-        self.misroute_rate, self.dispatch_ms = misroute_rate, dispatch_ms
         self.engine = engine
         # common random numbers: ONE frozen trace for every round/trial
-        self._trace = sample_trace(workload, n_requests, seed=seed,
-                                   max_total=long_window)
+        self._trace = trace if trace is not None else sample_trace(
+            workload, n_requests, seed=seed, max_total=spec.max_window)
         self._memo: Dict[tuple, tuple] = {}
         self._prev: Optional[tuple] = None   # (roles, sigs, summaries)
         self.stats = dict(measure_calls=0, memo_hits=0, full_fleet_sims=0,
@@ -267,18 +265,12 @@ class _FleetMeasurer:
         if key in self._memo:
             self.stats["memo_hits"] += 1
             return self._memo[key]
-        policy, plan, registry = self._fs.build_topology(
-            self.kind, self.workload, self.profile, self.model,
-            b_short=self.b_short, gamma=self.gamma,
-            long_window=self.long_window, windows=self.windows,
-            pool_overrides=overrides or None, small_model=self.small_model,
-            small_profile=self.small_profile,
-            misroute_rate=self.misroute_rate, dispatch_ms=self.dispatch_ms,
-            misroute_seed=self.seed)
+        policy, plan, registry = self.spec.build(
+            self.workload, pool_overrides=overrides or None)
         sim = self._fs.FleetSim(policy, plan, registry=registry,
                                 prefill_chunk=self.prefill_chunk,
                                 rng_seed=self.seed, engine=self.engine)
-        roles = self._fs.topology_roles(self.kind, plan)
+        roles = plan_roles(plan)
         # the only sim-relevant quantity a PoolOverride can move is the
         # instance count (the recalibrated MFU/HOL change the *bounds*,
         # not the engines) — so an unchanged count over an unchanged
@@ -302,21 +294,14 @@ class _FleetMeasurer:
         return out
 
 
-def size_to_slo(kind: str, workload: Workload, profile: BaseProfile,
-                model: ModelSpec, *, b_short: int = 4096,
-                gamma: float = 2.0,
-                windows: Optional[Sequence[int]] = None,
-                slo: SLOSpec = SLOSpec(),
-                n_requests: int = 3000, seed: int = 0,
-                max_rounds: int = 8, prefill_chunk: int = 512,
-                small_model: Optional[ModelSpec] = None,
-                small_profile: Optional[BaseProfile] = None,
-                misroute_rate: float = 0.0,
-                dispatch_ms: float = 0.0,
-                trim: bool = True,
-                long_window: Optional[int] = None,
-                engine: str = "numpy") -> SLOSizingResult:
-    """Iteratively re-provision `kind` until the *measured* TTFT p99 meets
+def size_to_slo_spec(spec: TopologySpec, workload: Workload, *,
+                     slo: SLOSpec = SLOSpec(),
+                     n_requests: int = 3000, seed: int = 0,
+                     max_rounds: int = 8, prefill_chunk: int = 512,
+                     trim: bool = True,
+                     engine: str = "numpy",
+                     trace=None) -> SLOSizingResult:
+    """Iteratively re-provision `spec` until the *measured* TTFT p99 meets
     the SLO (or `max_rounds` is exhausted — `compliant` reports which).
 
     Each round replays the identical request trace (same seed), so rounds
@@ -331,10 +316,12 @@ def size_to_slo(kind: str, workload: Workload, profile: BaseProfile,
     the instance floor stepped up by the same factor (at least one
     instance per round, for guaranteed progress).
 
-    Works for every topology FleetSim serves, including the
-    model-heterogeneous kinds (`semantic` / `semantic_fleetopt` /
-    `moe_pool` / `moe_semantic` — pass `small_model` / `small_profile` /
-    `misroute_rate` / `dispatch_ms` through to `build_topology`).
+    Works for every `TopologySpec` FleetSim can serve — hand-built specs
+    and every `TopologySpec.from_kind` compilation alike (the legacy
+    kind-string front end is `size_to_slo`).  Pass `trace=` to share one
+    frozen arrival trace across many candidate specs (the topology
+    search's common-random-numbers discipline); by default the measurer
+    samples its own trace capped at `spec.max_window`.
 
     After compliance, a **trim phase** (`trim=True`) bisects each grown
     pool's instance count back down toward its round-0 sizing, keeping
@@ -347,20 +334,11 @@ def size_to_slo(kind: str, workload: Workload, profile: BaseProfile,
     """
     import numpy as np
 
-    from repro.core.routing import LONG_WINDOW
-    from repro.serving.fleetsim import topology_roles
-
-    if long_window is None:
-        long_window = int(max(windows)) if (kind == "multipool" and windows) \
-            else LONG_WINDOW
-
     measurer = _FleetMeasurer(
-        kind, workload, profile, model, b_short=b_short, gamma=gamma,
-        windows=windows, long_window=long_window, n_requests=n_requests,
-        seed=seed, prefill_chunk=prefill_chunk, small_model=small_model,
-        small_profile=small_profile, misroute_rate=misroute_rate,
-        dispatch_ms=dispatch_ms, engine=engine)
+        spec, workload, n_requests=n_requests, seed=seed,
+        prefill_chunk=prefill_chunk, engine=engine, trace=trace)
     measure = measurer.measure
+    kind = spec.kind
 
     def meets(report: Dict[str, dict]) -> bool:
         f = report["fleet"]
@@ -390,10 +368,8 @@ def size_to_slo(kind: str, workload: Workload, profile: BaseProfile,
             # MFU backoff starts from each pool's *sized* MFU, not the
             # global closed-form constant (a disagg prefill pool may have
             # been provisioned at its own dedicated-prefill MFU)
-            base_mfu = {role: pool.sized_prefill_mfu
-                        for role, pool in zip(
-                            topology_roles(kind, plan),
-                            sorted(plan.pools, key=lambda p: p.window))}
+            base_mfu = {pool.role: pool.sized_prefill_mfu
+                        for pool in plan.pools}
         fleet_p99 = float(report["fleet"].get("ttft_p99_s", 0.0))
         fleet_tpot = float(report["fleet"].get("tpot_p99_ms", 0.0))
         fleet_e2e = float(report["fleet"].get("e2e_p99_s", 0.0))
@@ -472,9 +448,8 @@ def size_to_slo(kind: str, workload: Workload, profile: BaseProfile,
         if slo.e2e_p99_s:
             overshoot = max(overshoot, fleet_e2e / slo.e2e_p99_s)
         step = min(max(overshoot, _MIN_STEP), _MAX_STEP)
-        roles = topology_roles(kind, plan)
-        pools_by_role = dict(zip(roles, sorted(plan.pools,
-                                               key=lambda p: p.window)))
+        roles = plan_roles(plan)
+        pools_by_role = {p.role: p for p in plan.pools}
         for role in violating:
             if role not in roles:    # defensive: role vanished from plan
                 continue
@@ -551,3 +526,37 @@ def size_to_slo(kind: str, workload: Workload, profile: BaseProfile,
         overrides=overrides, rounds=rounds, compliant=compliant,
         trimmed=trimmed, trim_rounds=trim_rounds,
         sim_stats=dict(measurer.stats), measured_hol=measured_hol)
+
+
+def size_to_slo(kind: str, workload: Workload, profile: BaseProfile,
+                model: ModelSpec, *, b_short: int = 4096,
+                gamma: float = 2.0,
+                windows: Optional[Sequence[int]] = None,
+                slo: SLOSpec = SLOSpec(),
+                n_requests: int = 3000, seed: int = 0,
+                max_rounds: int = 8, prefill_chunk: int = 512,
+                small_model: Optional[ModelSpec] = None,
+                small_profile: Optional[BaseProfile] = None,
+                misroute_rate: float = 0.0,
+                dispatch_ms: float = 0.0,
+                trim: bool = True,
+                long_window: Optional[int] = None,
+                engine: str = "numpy") -> SLOSizingResult:
+    """Legacy kind-string front end for `size_to_slo_spec`: compile the
+    kind to its `TopologySpec` (`TopologySpec.from_kind` is the single
+    kind-dispatch site in the codebase) and size that.  The frozen-trace
+    cap is `spec.max_window`, which subsumes the old multipool
+    `max(windows)` special case; pass `long_window` to stretch the
+    terminal serve window of the non-multipool kinds."""
+    from .routing import LONG_WINDOW
+
+    spec = TopologySpec.from_kind(
+        kind, profile, model, b_short=b_short, gamma=gamma,
+        long_window=int(long_window) if long_window else LONG_WINDOW,
+        windows=windows, small_model=small_model,
+        small_profile=small_profile, misroute_rate=misroute_rate,
+        dispatch_ms=dispatch_ms, misroute_seed=seed)
+    return size_to_slo_spec(
+        spec, workload, slo=slo, n_requests=n_requests, seed=seed,
+        max_rounds=max_rounds, prefill_chunk=prefill_chunk, trim=trim,
+        engine=engine)

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 
 import jax
 import numpy as np
@@ -29,16 +30,24 @@ def build_router(cfg, params, policy: str, *, b_short: int, window_long: int,
     if policy == "homo":
         pools = {"long": PoolEngine(cfg, params, window=window_long,
                                     profile=profile, n_slots=4, name="long")}
-        return ContextRouter(pools, RouterPolicy(kind="homo"))
+        return ContextRouter(pools, RouterPolicy(
+            kind="homo", ladder=[("long", math.inf)]))
     pools = {
         "short": PoolEngine(cfg, params, window=2 * b_short, profile=profile,
                             n_slots=16, name="short"),
         "long": PoolEngine(cfg, params, window=window_long, profile=profile,
                            n_slots=4, name="long"),
     }
-    return ContextRouter(pools, RouterPolicy(kind=policy, b_short=b_short,
-                                             gamma=2.0,
-                                             p99_output=p99_output))
+    # explicit admission ladders (the TopologySpec compilation of each
+    # legacy kind): two_pool admits at b_short on the conservative
+    # prompt + p99 metric; fleetopt at gamma * b_short on predicted total
+    boundary = float(b_short) if policy == "two_pool" \
+        else float(int(2.0 * b_short))
+    return ContextRouter(pools, RouterPolicy(
+        kind=policy, b_short=b_short, gamma=2.0, p99_output=p99_output,
+        metric_kind="prompt_plus_p99" if policy == "two_pool"
+        else "predicted_total",
+        ladder=[("short", boundary), ("long", math.inf)]))
 
 
 def main() -> None:

@@ -3,8 +3,8 @@ from .engine import (DrainTruncatedError, PoolEngine, resolve_prefill_chunk,
                      scaled_prefill_chunk)
 from .fleetsim import (FleetSim, PoolGroup, PoolSummary, SimVsAnalytical,
                        analytical_decode_tok_per_watt, build_topology,
-                       prepare_topology, run_fleet_grid, simulate_topology,
-                       topology_roles, trace_requests)
+                       prepare_spec, prepare_topology, run_fleet_grid,
+                       simulate_spec, simulate_topology, trace_requests)
 from .models import ModelBinding, ModelProfileRegistry
 from .request import Request, synthetic_requests
 from .router import SEMANTIC_KINDS, ContextRouter, RouterPolicy
@@ -15,7 +15,8 @@ __all__ = ["EnergyMeter", "MeterBank", "PoolEngine", "BatchedPoolEngine",
            "ContextRouter", "RouterPolicy", "FleetSim", "PoolGroup",
            "PoolSummary",
            "SimVsAnalytical", "analytical_decode_tok_per_watt",
-           "build_topology", "simulate_topology", "topology_roles",
+           "build_topology", "simulate_topology", "simulate_spec",
            "trace_requests", "ModelBinding", "ModelProfileRegistry",
            "SEMANTIC_KINDS", "DrainTruncatedError", "resolve_prefill_chunk",
-           "scaled_prefill_chunk", "prepare_topology", "run_fleet_grid"]
+           "scaled_prefill_chunk", "prepare_topology", "prepare_spec",
+           "run_fleet_grid"]

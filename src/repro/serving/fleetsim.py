@@ -60,22 +60,19 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.disagg import (HANDOFF_J_PER_BYTE, INTERCONNECT_BPS,
-                               Disaggregated)
-from repro.core.fleet import FleetReport, PoolOverride, apply_overrides
-from repro.core.modelspec import LLAMA31_8B, ModelSpec
-from repro.core.moe import with_dispatch_floor
-from repro.core.multipool import MultiPool
-from repro.core.profiles import BaseProfile, computed_profile
-from repro.core.routing import (LONG_WINDOW, FleetOpt, Homogeneous, Semantic,
-                                TwoPool)
+from repro.core.disagg import HANDOFF_J_PER_BYTE, INTERCONNECT_BPS
+from repro.core.fleet import FleetReport, PoolOverride
+from repro.core.modelspec import ModelSpec
+from repro.core.profiles import BaseProfile
+from repro.core.routing import LONG_WINDOW
+from repro.core.topospec import TopologySpec, plan_roles
 from repro.core.workloads import Workload
 
 from .engine import scaled_prefill_chunk
-from .models import ModelBinding, ModelProfileRegistry
+from .models import ModelProfileRegistry
 from .request import (Request, latency_percentiles as _percentiles,
                       latency_percentiles_arrays, sample_trace)
-from .router import SEMANTIC_KINDS, ContextRouter, RouterPolicy
+from .router import ContextRouter, RouterPolicy
 from .soa import BatchedPoolEngine
 
 
@@ -107,28 +104,6 @@ def trace_requests(workload: Workload, n: int, *, seed: int = 0,
         for i, (p, o, t) in enumerate(trace)]
 
 
-def topology_roles(kind: str, plan: FleetReport) -> List[str]:
-    """Router role name per plan pool, ascending-window order.  Ties
-    (a disagg slice's prefill and decode pools share a window) keep the
-    plan's prefill-before-decode provisioning order — Python's sort is
-    stable, and `core.fleet.apply_overrides` sorts the same way, so role
-    alignment holds everywhere."""
-    pools = sorted(plan.pools, key=lambda p: p.window)
-    if kind == "homo":
-        return ["homo"]
-    if kind == "moe_pool":
-        return ["moe"]
-    if kind in ("two_pool", "fleetopt"):
-        assert len(pools) == 2, [p.name for p in pools]
-        return ["short", "long"]
-    if kind in SEMANTIC_KINDS:
-        assert len(pools) == 2, [p.name for p in pools]
-        return ["small", "large"]
-    if kind in ("multipool", "disagg", "disagg_fleetopt"):
-        return [p.name for p in pools]
-    raise ValueError(kind)
-
-
 def build_topology(kind: str, workload: Workload, profile: BaseProfile,
                    model: ModelSpec, *, b_short: int = 4096,
                    gamma: float = 2.0, long_window: int = LONG_WINDOW,
@@ -147,124 +122,17 @@ def build_topology(kind: str, workload: Workload, profile: BaseProfile,
     `pool_overrides` layers per-role SLO recalibrations (core.slo) on the
     closed-form plan.
 
-    Model-heterogeneous kinds (DESIGN.md §9):
-
-      moe_pool          — homo ladder, but `model`/`profile` are an MoE and
-                          `dispatch_ms` adds the expert all-to-all floor to
-                          every decode iteration (core.moe).
-      semantic          — §5.1: `small_model`/`small_profile` (default
-                          Llama-8B @ TP1 on the same chip) behind the
-                          B_short rung, `model` behind the long rung; no
-                          overflow headroom (small pool serves at B_short).
-      semantic_fleetopt — semantic + FleetOpt headroom: the small pool
-                          serves at gamma * B_short so output mispredictions
-                          finish in place; only semantic misroutes (rate
-                          `misroute_rate`) and >gamma*B_short overflows
-                          escalate.
-      moe_semantic      — semantic_fleetopt with the MoE as the large model.
-    """
-    if misroute_rate and kind not in SEMANTIC_KINDS:
-        raise ValueError(f"misroute_rate only applies to semantic kinds,"
-                         f" not {kind!r}")
-    if dispatch_ms and kind not in ("moe_pool", "moe_semantic"):
-        raise ValueError(f"dispatch_ms only applies to MoE kinds,"
-                         f" not {kind!r}")
-    registry = ModelProfileRegistry.homogeneous(model, profile)
-    if kind == "homo":
-        rep = Homogeneous(window=long_window).provision(
-            workload, profile, model)
-        policy = RouterPolicy(kind="homo", b_short=b_short)
-    elif kind == "moe_pool":
-        # the MoE's per-iteration weight stream is already active-params
-        # (the profile's roofline); the dispatch floor is folded into w_ms
-        # so provisioning and simulation pay it identically
-        prof = with_dispatch_floor(profile, dispatch_ms)
-        rep = Homogeneous(window=long_window).provision(
-            workload, prof, model)
-        policy = RouterPolicy(kind="moe_pool", b_short=b_short)
-        registry = ModelProfileRegistry.homogeneous(
-            model, prof, dispatch_ms=dispatch_ms)
-    elif kind in SEMANTIC_KINDS:
-        if small_model is None:
-            small_model = LLAMA31_8B
-        if small_profile is None:
-            # the paper's §5.1 small pool: the 8B-class model at TP1 on
-            # the same accelerator generation as the large pool
-            small_profile = computed_profile(
-                small_model, profile.chip, profile.power_model, tp=1)
-        large_profile = with_dispatch_floor(profile, dispatch_ms) \
-            if kind == "moe_semantic" else profile
-        sem = Semantic(b_short=b_short, small_profile=small_profile,
-                       small_model=small_model,
-                       gamma=1.0 if kind == "semantic" else gamma,
-                       long_window=long_window,
-                       misroute_rate=misroute_rate)
-        rep = sem.provision(workload, large_profile, model)
-        policy = RouterPolicy(kind=kind, b_short=b_short, gamma=sem.gamma,
-                              misroute_rate=misroute_rate,
-                              detect_tokens=sem.detect_tokens,
-                              misroute_seed=misroute_seed)
-        registry = ModelProfileRegistry(
-            default=ModelBinding(model, large_profile,
-                                 dispatch_ms=dispatch_ms))
-        registry.bind("small", ModelBinding(small_model, small_profile))
-        registry.bind("large", ModelBinding(model, large_profile,
-                                            dispatch_ms=dispatch_ms))
-    elif kind == "two_pool":
-        rep = TwoPool(b_short=b_short, long_window=long_window).provision(
-            workload, profile, model)
-        policy = RouterPolicy(kind="two_pool", b_short=b_short,
-                              p99_output=int(np.quantile(workload.outputs,
-                                                         0.99)))
-    elif kind == "fleetopt":
-        # The serving RouterPolicy admits short iff predicted total <=
-        # gamma * b_short and the short pool serves window gamma * b_short
-        # (router.py semantics).  The analytical twin with the identical
-        # traffic split and overflow boundary is FleetOpt(gamma*b_short,
-        # gamma=1): admission and window both at gamma*b_short, requests
-        # whose actual total overgrows it migrate.
-        rep = FleetOpt(b_short=int(gamma * b_short), gamma=1.0,
-                       long_window=long_window).provision(
-            workload, profile, model)
-        policy = RouterPolicy(kind="fleetopt", b_short=b_short, gamma=gamma)
-    elif kind == "multipool":
-        if not windows:
-            raise ValueError("kind='multipool' needs an ascending `windows`"
-                             " ladder (e.g. core.multipool.ladder_windows)")
-        rep = MultiPool(windows=list(windows), gamma=gamma).provision(
-            workload, profile, model)
-        pools = sorted(rep.pools, key=lambda p: p.window)
-        if not pools:
-            raise ValueError("multipool plan provisioned no pools")
-        # admission at window/gamma (route-at-w/gamma, serve-at-w overflow
-        # headroom); the largest surviving pool takes everything else
-        ladder = [(p.name, p.window / gamma) for p in pools[:-1]]
-        ladder.append((pools[-1].name, math.inf))
-        policy = RouterPolicy(kind="multipool", gamma=gamma, ladder=ladder)
-    elif kind in ("disagg", "disagg_fleetopt"):
-        # Same analytical-twin convention as fleetopt: the serving router
-        # admits short iff predicted total <= gamma * b_short and the short
-        # slice serves that same window, so the twin is
-        # Disaggregated(gamma * b_short, gamma=1).  Admission routes to the
-        # *prefill* roles; decode pools are fed only by the handoff hop.
-        dis = Disaggregated(b_short=int(gamma * b_short), gamma=1.0,
-                            long_window=long_window,
-                            split=(kind == "disagg_fleetopt"))
-        rep = dis.provision(workload, profile, model)
-        prefill = [p for p in sorted(rep.pools, key=lambda p: p.window)
-                   if p.phase == "prefill"]
-        ladder = [(p.name, float(p.window)) for p in prefill[:-1]]
-        ladder.append((prefill[-1].name, math.inf))
-        policy = RouterPolicy(kind=kind, b_short=b_short, gamma=gamma,
-                              ladder=ladder)
-    else:
-        raise ValueError(kind)
-    if pool_overrides:
-        roles = topology_roles(kind, rep)
-        apply_overrides(rep, pool_overrides, roles=roles,
-                        streamed_params=registry.streamed_params_by_role(
-                            roles))
-    return policy, rep, registry
+    This is a thin legacy-kind front end: the kind string compiles to a
+    `core.topospec.TopologySpec` (the declarative IR every layer reads —
+    DESIGN.md §12) and everything is derived from the spec.  Build the
+    spec directly (`TopologySpec.from_kind` or by hand) to keep it —
+    e.g. for `core.topo_search.optimize_topology`."""
+    spec = TopologySpec.from_kind(
+        kind, profile, model, b_short=b_short, gamma=gamma,
+        long_window=long_window, windows=windows, small_model=small_model,
+        small_profile=small_profile, misroute_rate=misroute_rate,
+        dispatch_ms=dispatch_ms, misroute_seed=misroute_seed)
+    return spec.build(workload, pool_overrides=pool_overrides)
 
 
 @dataclasses.dataclass
@@ -505,28 +373,43 @@ class FleetSim:
         self.model = registry.default.model
         self.kv_interconnect_Bps = kv_interconnect_Bps
         self.kv_handoff_j_per_byte = kv_handoff_j_per_byte
-        role_names = topology_roles(policy.kind, plan)
+        spec: Optional[TopologySpec] = getattr(policy, "spec", None)
+        if spec is None:
+            raise ValueError(
+                "FleetSim needs a spec-compiled policy: every pool's wiring"
+                " (roles, eviction, overflow/escalation/handoff edges) is"
+                " read from policy.spec — build the topology through"
+                " core.topospec.TopologySpec (from_kind / build) or"
+                " serving.fleetsim.build_topology")
+        self.spec = spec
+        role_names = plan_roles(plan)
         roles = list(zip(role_names, pools))
         # topological DAG order: ascending window, and within a disagg
         # slice prefill before its paired decode (the provisioning order —
         # the window sort is stable)
         self.order = role_names
         self.groups: Dict[str, PoolGroup] = {}
-        decode_roles = [(r, p) for r, p in roles if p.phase != "prefill"]
-        terminal_decode = decode_roles[-1][0] if decode_roles else None
-        for idx, (role, p) in enumerate(roles):
+        surviving = set(role_names)
+        spec_by_role = {sp.role: sp for sp in spec.pools}
+
+        def _overflow_dest(role: str) -> Optional[str]:
+            # follow the spec's overflow chain through pools the workload
+            # dropped (a rung that routed no traffic provisions no pool):
+            # its predecessor overflows straight to the next survivor
+            dest = spec_by_role[role].overflow_to
+            while dest is not None and dest not in surviving:
+                dest = spec_by_role[dest].overflow_to
+            return dest
+
+        for role, p in roles:
+            sp = spec_by_role[role]
             # Overflow headroom ends at the pool window: a request routed
-            # here that outgrows it migrates one hop up the ladder
-            # (preemption + re-prefill in the next pool).  FleetOpt's short
-            # pool, every non-terminal multipool rung, every non-terminal
-            # disagg decode pool and the semantic small-model pool evict;
-            # terminal pools truncate at their window, like the token-level
-            # engine.
-            evict = (policy.kind == "fleetopt" and role == "short") \
-                or (policy.kind == "multipool" and idx < len(roles) - 1) \
-                or (policy.kind in SEMANTIC_KINDS and role == "small") \
-                or (policy.kind == "disagg_fleetopt"
-                    and p.phase != "prefill" and role != terminal_decode)
+            # here that outgrows it migrates one hop along the spec's
+            # overflow edge (preemption + re-prefill in the destination
+            # pool).  A pool whose edge resolves to no surviving
+            # destination is terminal in practice and truncates at its
+            # window, like the token-level engine.
+            evict = sp.evict_on_overflow and _overflow_dest(role) is not None
             binding = registry.for_role(role)
             chunk = scaled_prefill_chunk(p.profile, prefill_chunk) \
                 if prefill_chunk else prefill_chunk
@@ -540,35 +423,32 @@ class FleetSim:
                 dispatch_ms=binding.dispatch_ms,
                 rng_seed=rng_seed)
             self.groups[role] = PoolGroup(role, engine)
-        # cross-pool edges, all pointing forward in `order`:
+        # cross-pool edges, read straight off the spec's pools (all point
+        # forward in `order` — validated at spec construction):
         #   handoff_to  — prefill role -> its slice's decode role
         #   overflow_to — evicting role -> where its evictions re-enter
-        #                 (ladder kinds: next rung; disagg: next slice's
-        #                 *prefill* pool, where the request re-prefills)
+        #                 (ladder specs: next surviving rung; disagg: the
+        #                 next slice's *prefill* pool, where the request
+        #                 re-prefills)
         #   escalate_to — semantic small-model role -> the large-model role
         #                 that re-serves detected misroutes from scratch
         self.handoff_to: Dict[str, str] = {}
         self.overflow_to: Dict[str, str] = {}
         self.escalate_to: Dict[str, str] = {}
-        if policy.kind in ("disagg", "disagg_fleetopt"):
-            dec_by_window = {p.window: r for r, p in decode_roles}
-            pf_roles = [(r, p) for r, p in roles if p.phase == "prefill"]
-            for r, p in pf_roles:
-                self.handoff_to[r] = dec_by_window[p.window]
-            for (r1, p1), (_, p2) in zip(decode_roles, decode_roles[1:]):
-                pf_next = next(r for r, p in pf_roles
-                               if p.window == p2.window)
-                self.overflow_to[r1] = pf_next
-            # per-role whole-instance KV bytes per prompt token
-            self._kv_bytes_per_tok = {
-                r: registry.for_role(r).kv_bytes_per_instance_token(
-                    p.profile) for r, p in pf_roles}
-        else:
-            for a, b in zip(self.order, self.order[1:]):
-                self.overflow_to[a] = b
-            if policy.kind in SEMANTIC_KINDS:
-                self.escalate_to["small"] = "large"
-            self._kv_bytes_per_tok = {}
+        self._kv_bytes_per_tok: Dict[str, float] = {}
+        for role, p in roles:
+            sp = spec_by_role[role]
+            dest = _overflow_dest(role)
+            if dest is not None:
+                self.overflow_to[role] = dest
+            if sp.escalate_to is not None and sp.escalate_to in surviving:
+                self.escalate_to[role] = sp.escalate_to
+            if sp.handoff_to is not None and sp.handoff_to in surviving:
+                self.handoff_to[role] = sp.handoff_to
+                # per-role whole-instance KV bytes per prompt token
+                self._kv_bytes_per_tok[role] = \
+                    registry.for_role(role).kv_bytes_per_instance_token(
+                        p.profile)
         self.router = ContextRouter(self.groups, policy)
         self.migrations = 0
         self.handoffs = 0
@@ -852,6 +732,32 @@ class SimVsAnalytical:
                     migrations=f["migrations"])
 
 
+def prepare_spec(spec: TopologySpec, workload: Workload, *,
+                 n_requests: int = 4000, seed: int = 0,
+                 arrival_rate: Optional[float] = None,
+                 prefill_chunk: int = 512,
+                 pool_overrides: Optional[Dict[str, PoolOverride]] = None,
+                 engine: str = "numpy"):
+    """Provision a `TopologySpec` analytically and synthesise its trace;
+    returns `(sim, reqs, plan)` ready for `sim.run(reqs)` — the common
+    front half of `simulate_spec`, split out so the grid driver (and the
+    SLO / topology-search loops) can prepare many scenarios before
+    batch-draining them.  The trace's clipping bound is the spec's largest
+    serve window (`spec.max_window`) — no per-kind special cases."""
+    if arrival_rate is not None and arrival_rate != workload.arrival_rate:
+        workload = dataclasses.replace(workload, arrival_rate=arrival_rate)
+    policy, plan, registry = spec.build(workload,
+                                        pool_overrides=pool_overrides)
+    sim = FleetSim(policy, plan, registry=registry,
+                   prefill_chunk=prefill_chunk, rng_seed=seed,
+                   engine=engine)
+    sim.workload_name = workload.name     # grid-driver report labels
+    sim.topology_kind = spec.kind
+    reqs = trace_requests(workload, n_requests, seed=seed,
+                          max_total=spec.max_window)
+    return sim, reqs, plan
+
+
 def prepare_topology(kind: str, workload: Workload, profile: BaseProfile,
                      model: ModelSpec, *, b_short: int = 4096,
                      gamma: float = 2.0,
@@ -866,28 +772,17 @@ def prepare_topology(kind: str, workload: Workload, profile: BaseProfile,
                      dispatch_ms: float = 0.0,
                      long_window: int = LONG_WINDOW,
                      engine: str = "numpy"):
-    """Provision a topology analytically and synthesise its trace; returns
-    `(sim, reqs, plan)` ready for `sim.run(reqs)` — the common front half of
-    `simulate_topology`, split out so the grid driver can prepare many
-    scenarios before batch-draining them."""
-    if arrival_rate is not None and arrival_rate != workload.arrival_rate:
-        workload = dataclasses.replace(workload, arrival_rate=arrival_rate)
-    if kind == "multipool" and windows:
-        long_window = int(max(windows))
-    policy, plan, registry = build_topology(
-        kind, workload, profile, model, b_short=b_short, gamma=gamma,
-        long_window=long_window, windows=windows,
-        pool_overrides=pool_overrides, small_model=small_model,
+    """Legacy-kind front end of `prepare_spec`: compile the kind string to
+    a `TopologySpec` and prepare it."""
+    spec = TopologySpec.from_kind(
+        kind, profile, model, b_short=b_short, gamma=gamma,
+        long_window=long_window, windows=windows, small_model=small_model,
         small_profile=small_profile, misroute_rate=misroute_rate,
         dispatch_ms=dispatch_ms, misroute_seed=seed)
-    sim = FleetSim(policy, plan, registry=registry,
-                   prefill_chunk=prefill_chunk, rng_seed=seed,
-                   engine=engine)
-    sim.workload_name = workload.name     # grid-driver report labels
-    sim.topology_kind = kind
-    reqs = trace_requests(workload, n_requests, seed=seed,
-                          max_total=long_window)
-    return sim, reqs, plan
+    return prepare_spec(spec, workload, n_requests=n_requests, seed=seed,
+                        arrival_rate=arrival_rate,
+                        prefill_chunk=prefill_chunk,
+                        pool_overrides=pool_overrides, engine=engine)
 
 
 def _sim_vs_analytical(sim: FleetSim, plan, kind: str,
@@ -929,6 +824,22 @@ def simulate_topology(kind: str, workload: Workload, profile: BaseProfile,
         dispatch_ms=dispatch_ms, long_window=long_window, engine=engine)
     report = sim.run(reqs)
     return _sim_vs_analytical(sim, plan, kind, workload.name, report)
+
+
+def simulate_spec(spec: TopologySpec, workload: Workload, *,
+                  n_requests: int = 4000, seed: int = 0,
+                  arrival_rate: Optional[float] = None,
+                  prefill_chunk: int = 512,
+                  pool_overrides: Optional[Dict[str, PoolOverride]] = None,
+                  engine: str = "numpy") -> SimVsAnalytical:
+    """Measure an arbitrary `TopologySpec` end-to-end — `simulate_topology`
+    for specs that never had a kind string (hand-built or searched)."""
+    sim, reqs, plan = prepare_spec(
+        spec, workload, n_requests=n_requests, seed=seed,
+        arrival_rate=arrival_rate, prefill_chunk=prefill_chunk,
+        pool_overrides=pool_overrides, engine=engine)
+    report = sim.run(reqs)
+    return _sim_vs_analytical(sim, plan, spec.kind, workload.name, report)
 
 
 def run_fleet_grid(scenarios: List[Tuple[FleetSim, List[Request], object]],

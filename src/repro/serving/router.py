@@ -48,12 +48,9 @@ import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.routing import ESCALATION_DETECT_TOKENS
+from repro.core.topospec import SEMANTIC_KINDS  # noqa: F401  (re-export)
 
 from .request import Request
-
-# kinds whose [small, large] rungs serve different models and whose
-# classifier can misroute (the SemanticRouter layer)
-SEMANTIC_KINDS = ("semantic", "semantic_fleetopt", "moe_semantic")
 
 _HASH_A = 2654435761          # Knuth multiplicative hash (mod 2^32)
 
@@ -69,52 +66,52 @@ def _misroute_u(rid: int, seed: int) -> float:
 
 @dataclasses.dataclass
 class RouterPolicy:
-    # homo | two_pool | fleetopt | multipool | disagg[_fleetopt] |
-    # moe_pool | semantic | semantic_fleetopt | moe_semantic
+    # the TopologySpec kind that compiled this policy (a label — routing
+    # behaviour is fully determined by the explicit fields below)
     kind: str
     b_short: int = 4096
     gamma: float = 2.0
-    p99_output: int = 1024     # conservative two_pool admission margin
-    # K-pool / disagg: explicit ordered (role, admission boundary) ladder.
-    # Required for kind="multipool" and the disagg kinds (where it spans
-    # the prefill roles); ignored (derived) for the named §4 topologies.
+    p99_output: int = 1024     # conservative prompt_plus_p99 margin
+    # Ordered (role, admission boundary) ladder — REQUIRED: every policy
+    # carries its ladder explicitly (compiled by `TopologySpec.policy`);
+    # the router never derives rungs from the kind string.
     ladder: Optional[List[Tuple[str, float]]] = None
-    # semantic kinds: classifier error rate, detection latency (decode
-    # tokens the small model emits before a misroute escalates — the
-    # constant shared with the analytical core.routing.Semantic so both
-    # layers price the same latency) and the seed of the deterministic
+    # routing metric: "predicted_total" (prompt + E[output]) or
+    # "prompt_plus_p99" (prompt + p99_output — conservative two_pool)
+    metric_kind: str = "predicted_total"
+    # misroute channel: the (small, large) role pair the classifier's
+    # decisions flip between; None disables flipping entirely
+    flip: Optional[Tuple[str, str]] = None
+    # classifier error rate, detection latency (decode tokens the small
+    # model emits before a misroute escalates — the constant shared with
+    # the analytical core.topospec semantic accounting so both layers
+    # price the same latency) and the seed of the deterministic
     # per-request misroute draw
     misroute_rate: float = 0.0
     detect_tokens: int = ESCALATION_DETECT_TOKENS
     misroute_seed: int = 0
+    # the TopologySpec this policy was compiled from (FleetSim reads pool
+    # wiring — overflow/escalation/handoff edges — from it)
+    spec: Optional[object] = dataclasses.field(default=None, repr=False)
 
     @property
     def is_semantic(self) -> bool:
-        return self.kind in SEMANTIC_KINDS
+        return self.flip is not None
 
-    def admission_ladder(self, roles: Sequence[str]
+    def admission_ladder(self, roles: Sequence[str] = ()
                          ) -> List[Tuple[str, float]]:
         """Ordered (role, boundary) pairs; route to the first role whose
         boundary >= the request's routing metric."""
-        if self.kind in ("homo", "moe_pool"):
-            return [(roles[0], math.inf)]
-        if self.kind == "two_pool":
-            return [("short", float(self.b_short)), ("long", math.inf)]
-        if self.kind == "fleetopt":
-            return [("short", self.gamma * self.b_short), ("long", math.inf)]
-        if self.is_semantic:
-            return [("small", float(self.b_short)), ("large", math.inf)]
-        if self.kind in ("multipool", "disagg", "disagg_fleetopt"):
-            if not self.ladder:
-                raise ValueError(f"{self.kind} policy needs an explicit"
-                                 " ladder")
-            return list(self.ladder)
-        raise ValueError(self.kind)
+        if not self.ladder:
+            raise ValueError(
+                f"{self.kind} policy needs an explicit ladder — compile it"
+                f" via core.topospec.TopologySpec (from_kind / policy())")
+        return list(self.ladder)
 
     def metric(self, req: Request) -> float:
         """The routing metric: predicted total for overflow-capable
         topologies; prompt + p99(output) for conservative two_pool."""
-        if self.kind == "two_pool":
+        if self.metric_kind == "prompt_plus_p99":
             return req.prompt_len + self.p99_output
         return req.predicted_total
 
@@ -156,15 +153,18 @@ class ContextRouter:
         escalation after `detect_tokens` of decode; a true-short flipped
         large just rides the big model."""
         pol = self.policy
-        if not (pol.is_semantic and pol.misroute_rate > 0.0):
+        if not (pol.flip is not None and pol.misroute_rate > 0.0):
             return nominal
         if _misroute_u(req.rid, pol.misroute_seed) >= pol.misroute_rate:
             return nominal
+        small, large = pol.flip
+        if nominal not in (small, large):
+            return nominal
         req.misrouted = True
-        if nominal == "large":
+        if nominal == large:
             req.escalate_at = pol.detect_tokens
-            return "small"
-        return "large"
+            return small
+        return large
 
     def run(self, requests: List[Request], *, max_iters: int = 100_000
             ) -> Dict[str, dict]:

@@ -4,6 +4,7 @@ simulated tok/W within tolerance of the analytical core.fleet prediction.
 
 Everything is deterministic-seed; no jax touches the analytical engines.
 """
+import math
 import numpy as np
 import pytest
 
@@ -209,7 +210,8 @@ def test_router_report_honors_measurement_window():
     lifetime totals are non-zero."""
     eng = PoolEngine(None, None, window=64, profile=H100_LLAMA70B,
                      n_slots=2, streamed_params=STREAMED)
-    router = ContextRouter({"only": eng}, RouterPolicy(kind="homo"))
+    router = ContextRouter({"only": eng}, RouterPolicy(
+        kind="homo", ladder=[("only", math.inf)]))
     eng.meter.measure_t1 = 0.0
     rep = router.run([_req(i, 8, 6) for i in range(3)])
     assert eng.meter.tokens > 0

@@ -22,10 +22,22 @@ def _req(rid, plen, out, predicted=None):
                    max_new_tokens=out, predicted_output=predicted)
 
 
-def _router(kind, **kw):
-    pools = {"short": _pool("short", 64), "long": _pool("long", 256)} \
-        if kind != "homo" else {"only": _pool("only", 256)}
-    return ContextRouter(pools, RouterPolicy(kind=kind, **kw))
+def _router(kind, *, b_short=4096, gamma=2.0, **kw):
+    # explicit ladders, the TopologySpec.from_kind compilation of each
+    # legacy kind (policies no longer derive rungs from the kind string)
+    if kind == "homo":
+        pools = {"only": _pool("only", 256)}
+        ladder = [("only", math.inf)]
+    else:
+        pools = {"short": _pool("short", 64), "long": _pool("long", 256)}
+        boundary = float(b_short) if kind == "two_pool" \
+            else float(int(gamma * b_short))
+        ladder = [("short", boundary), ("long", math.inf)]
+    if kind == "two_pool":
+        kw.setdefault("metric_kind", "prompt_plus_p99")
+    return ContextRouter(pools, RouterPolicy(kind=kind, b_short=b_short,
+                                             gamma=gamma, ladder=ladder,
+                                             **kw))
 
 
 def test_homo_routes_everything_to_the_single_pool():

@@ -5,6 +5,8 @@ bandwidth-scaled prefill chunk, and the tentpole integration check —
 measured semantic / MoE fleet tok/W within 25% of the analytical
 core.routing.Semantic / core.moe provisioning at zero misroute and zero
 dispatch.  Deterministic seeds; no jax."""
+import math
+
 import numpy as np
 import pytest
 
@@ -40,7 +42,9 @@ def _pools():
 # --- SemanticRouter misroute channel ------------------------------------
 
 def test_semantic_routes_by_predicted_total_at_zero_misroute():
-    r = ContextRouter(_pools(), RouterPolicy(kind="semantic", b_short=64))
+    r = ContextRouter(_pools(), RouterPolicy(
+        kind="semantic", b_short=64, flip=("small", "large"),
+        ladder=[("small", 64.0), ("large", math.inf)]))
     assert r.route(_req(0, 32, 500, pred=32)) == "small"   # 64, inclusive
     assert r.route(_req(1, 33, 1, pred=32)) == "large"     # 65 > 64
     # zero misroute never flips or tags
@@ -52,7 +56,9 @@ def test_semantic_routes_by_predicted_total_at_zero_misroute():
 
 def test_misroute_flip_tags_only_large_into_small():
     pol = RouterPolicy(kind="semantic", b_short=64, misroute_rate=0.5,
-                       detect_tokens=7, misroute_seed=3)
+                       detect_tokens=7, misroute_seed=3,
+                       flip=("small", "large"),
+                       ladder=[("small", 64.0), ("large", math.inf)])
     r = ContextRouter(_pools(), pol)
     tagged = flipped_large = 0
     for rid in range(400):
@@ -80,7 +86,9 @@ def test_misroute_draw_is_deterministic_and_nested():
     higher misroute rate flips a *superset* of a lower rate's requests —
     the property that makes the degradation sweep monotone."""
     def misrouted(rate):
-        pol = RouterPolicy(kind="semantic", b_short=64, misroute_rate=rate)
+        pol = RouterPolicy(kind="semantic", b_short=64, misroute_rate=rate,
+                           flip=("small", "large"),
+                           ladder=[("small", 64.0), ("large", math.inf)])
         r = ContextRouter(_pools(), pol)
         out = set()
         for rid in range(500):

@@ -4,6 +4,7 @@ and the router path over them) hit `max_iters` and *returned as if
 drained*: queued requests silently vanished and the meters rolled
 under-counted tokens/energy straight into fleet tok/W.  Now a busy pool
 at the cap raises `DrainTruncatedError`."""
+import math
 import numpy as np
 import pytest
 
@@ -54,6 +55,7 @@ def test_router_propagates_truncation():
                       streamed_params=STREAMED, window=8192,
                       prefill_chunk=256, respect_arrival=True,
                       name="only")
-    router = ContextRouter({"only": pool}, RouterPolicy(kind="homo"))
+    router = ContextRouter({"only": pool}, RouterPolicy(
+        kind="homo", ladder=[("only", math.inf)]))
     with pytest.raises(DrainTruncatedError):
         router.run(_reqs(), max_iters=3)
