@@ -1,0 +1,241 @@
+"""Table F: whole-day tok/W under diurnal traffic, static vs autoscaled.
+
+Every other table measures steady-state Poisson arrivals at the peak
+rate; this one rides a compressed simulated day through the Azure-style
+diurnal envelope (core.workloads.DiurnalProfile, ~5x peak/trough swing)
+and asks the question the ROADMAP names: how much of FleetOpt's
+steady-state tok/W advantage survives a real day, and how much of the
+night-time idle power an ordinary reactive autoscaler
+(core.autoscale.AutoscalePolicy via serving.autoscale) can claw back.
+
+Per (chip x topology) cell the fleet is first SLO-sized at the *peak*
+rate exactly like Table B (steady Poisson, measured TTFT p99 <= 500 ms),
+then the identical sized fleet serves the identical whole-day diurnal
+trace twice:
+
+  static      — every peak-provisioned instance powered all day (what
+                the steady-state tables implicitly assume);
+  autoscaled  — instance counts tracked against each pool's observed
+                arrival rate with realistic friction: one-epoch reaction
+                lag, scale-up actuation lag, weight-load time from the
+                model's byte size, scale-down hysteresis, and warm-spare
+                idle power — all charged through the meters.
+
+The day is compressed (seconds per "hour", `--day-s`) so whole-day cells
+stay CI-sized; the *shape* — and with it the overprovision arithmetic
+relative to peak — is compression-invariant.  The weight-load time stays
+physical (bytes / PCIe bandwidth), which *overstates* scale-up friction
+on a compressed day: the autoscaling win reported here is conservative.
+
+Acceptance gates (enforced in main()):
+  * autoscaled fleetopt whole-day tok/W >= static fleetopt (the knob
+    must pay for itself where the paper's headline topology lives);
+  * every cell's measured TTFT p99 over peak-window arrivals (rate >=
+    90% of peak) <= 500 ms — autoscaling may not bust the SLO the fleet
+    was sized for.
+
+`--json PATH` dumps {"meta", "rows"} for the CI perf-regression diff
+(benchmarks/perf_diff.py --fleet against the committed
+benchmarks/results/fleet_diurnal.json, regenerated deliberately with
+`--quick --json benchmarks/results/fleet_diurnal.json`).
+
+Standalone:  PYTHONPATH=src python benchmarks/fleet_diurnal_bench.py
+             [--quick] [--json PATH] [--seed N]
+Harness:     PYTHONPATH=src python -m benchmarks.run --only fleet_diurnal
+"""
+import dataclasses
+import json
+import sys
+
+import numpy as np
+
+from repro.core import ladder_windows
+from repro.core.autoscale import AutoscalePolicy
+from repro.core.modelspec import LLAMA31_70B
+from repro.core.profiles import B200_LLAMA70B_FLEET, H100_LLAMA70B
+from repro.core.slo import SLOSpec, size_to_slo_spec
+from repro.core.topospec import TopologySpec
+from repro.core.workloads import AZURE, DiurnalProfile
+from repro.serving.fleetsim import prepare_spec
+from repro.serving.request import sample_diurnal_trace
+
+GENERATIONS = (("H100", H100_LLAMA70B), ("B200", B200_LLAMA70B_FLEET))
+B_SHORT = 4096          # Azure split boundary (paper)
+K_POOLS = 3
+# kind -> from_kind kwargs, declaratively (no kind dispatch in the bench)
+KIND_KWARGS = {"homo": dict(b_short=B_SHORT),
+               "fleetopt": dict(b_short=B_SHORT),
+               "multipool": dict(windows=ladder_windows(K_POOLS))}
+KINDS = tuple(KIND_KWARGS)
+PEAK_FRAC = 0.9         # "at peak" = arrivals where rate >= 90% of peak
+
+
+def _autoscale_policy(day_s: float) -> AutoscalePolicy:
+    """Controller knobs scaled to the compressed day: the control epoch
+    is ~1/40 of a day (36 real minutes), hysteresis ~3 epochs, actuation
+    lag ~1/3 epoch.  Weight-load bandwidth stays physical (the load
+    time is NOT compressed — conservative, see module docstring)."""
+    epoch = day_s / 40.0
+    return AutoscalePolicy(control_interval_s=epoch,
+                           target_utilization=0.65,
+                           scaleup_lag_s=epoch / 3.0,
+                           scaledown_delay_s=3.0 * epoch,
+                           min_frac=0.15)
+
+
+def _spec(kind: str, profile, day_s: float) -> TopologySpec:
+    spec = TopologySpec.from_kind(kind, profile, LLAMA31_70B,
+                                  **KIND_KWARGS[kind])
+    return dataclasses.replace(spec, autoscale=_autoscale_policy(day_s))
+
+
+def _peak_ttft_p99(sim, dprof: DiurnalProfile) -> float:
+    """Measured TTFT p99 over the requests that *arrived* while the
+    envelope was within PEAK_FRAC of peak — the gate's 'at peak'."""
+    arrival = np.concatenate([s.arrival for s in sim.summaries.values()])
+    first = np.concatenate([s.first_token for s in sim.summaries.values()])
+    mask = (dprof.rate_at(arrival) >= PEAK_FRAC * dprof.peak_rate) \
+        & (first >= 0)
+    if not mask.any():
+        return 0.0
+    return round(float(np.quantile(first[mask] - arrival[mask], 0.99)), 4)
+
+
+def run(peak_rate: float = 250.0, day_s: float = 240.0,
+        slo_requests: int = 1500, seed: int = 0, quick: bool = True):
+    dprof = DiurnalProfile(peak_rate=peak_rate, day_s=day_s)
+    wl = dataclasses.replace(AZURE, arrival_rate=peak_rate)
+    rows = []
+    for gen, prof in GENERATIONS:
+        for kind in KINDS:
+            spec = _spec(kind, prof, day_s)
+            # size at PEAK, steady Poisson, like Table B — the spec
+            # contract: provisioning never sees the envelope.  The
+            # internal sizing target is tighter than the 500 ms gate:
+            # a short steady sizing run trims to *just barely*
+            # compliant, and a fleet sized at the edge random-walks its
+            # queue over the much longer sustained diurnal peak.  The
+            # slack (sizing at 200 ms, gating at 500 ms) is the
+            # sustained-peak headroom.
+            res = size_to_slo_spec(spec, wl, slo=SLOSpec(ttft_p99_s=0.2),
+                                   n_requests=slo_requests, seed=seed)
+            trace = sample_diurnal_trace(wl, dprof, day_s, seed=seed,
+                                         max_total=spec.max_window)
+            for provisioning in ("static", "autoscaled"):
+                sim, reqs, plan = prepare_spec(
+                    spec, wl, seed=seed, trace=trace,
+                    pool_overrides=res.overrides,
+                    autoscale=provisioning == "autoscaled")
+                rep = sim.run(reqs, warmup_frac=0.0)
+                f = rep["fleet"]
+                span = max(sim._window[1], 1e-9)
+                if sim.schedules:
+                    avg_online = sum(
+                        s.online_instance_seconds(0.0, span)
+                        for s in sim.schedules.values()) / span
+                else:
+                    avg_online = float(plan.instances)
+                rows.append(dict(
+                    table="diurnal", generation=gen, workload=wl.name,
+                    topology=kind, provisioning=provisioning,
+                    peak_rate=peak_rate, day_s=day_s,
+                    tok_per_watt=f["tok_per_watt"],
+                    idle_energy_frac=f["idle_energy_frac"],
+                    ttft_p99_s=f.get("ttft_p99_s", 0.0),
+                    peak_ttft_p99_s=_peak_ttft_p99(sim, dprof),
+                    completed=f["completed"],
+                    migrations=f["migrations"],
+                    instances_peak=plan.instances,
+                    avg_online_instances=round(avg_online, 2),
+                    slo_compliant_at_peak=res.compliant))
+    cell = {(r["generation"], r["topology"], r["provisioning"]):
+            r["tok_per_watt"] for r in rows}
+    h = {k: cell[("H100",) + k] for k in
+         [(t, p) for t in KINDS for p in ("static", "autoscaled")]}
+    derived = (
+        f"whole-day autoscaled/static tok/W on H100: "
+        + ", ".join(f"{t} {h[(t, 'autoscaled')] / h[(t, 'static')]:.2f}x"
+                    for t in KINDS)
+        + f"; fleetopt/homo over the day: "
+          f"static {h[('fleetopt', 'static')] / h[('homo', 'static')]:.2f}x,"
+          f" autoscaled {h[('fleetopt', 'autoscaled')] / h[('homo', 'autoscaled')]:.2f}x"
+        + f"; B200/H100 fleetopt autoscaled "
+          f"{cell[('B200', 'fleetopt', 'autoscaled')] / h[('fleetopt', 'autoscaled')]:.2f}x")
+    return rows, derived
+
+
+def harness_run():
+    """benchmarks.run entry point (full config: a longer compressed day
+    at a higher peak).  Rows dump redirected away from the committed
+    --quick CI baseline results/fleet_diurnal.json."""
+    rows, derived = run(peak_rate=500.0, day_s=480.0, slo_requests=3000,
+                        quick=False)
+    return rows, derived
+
+
+harness_run.dump_name = "fleet_diurnal_full"
+
+
+def gate(rows) -> list:
+    """Acceptance failures (empty = green) — shared by main() and the
+    bench's own unit test."""
+    fails = []
+    cell = {(r["generation"], r["topology"], r["provisioning"]): r
+            for r in rows}
+    for gen, _ in GENERATIONS:
+        a = cell[(gen, "fleetopt", "autoscaled")]["tok_per_watt"]
+        s = cell[(gen, "fleetopt", "static")]["tok_per_watt"]
+        if a < s:
+            fails.append(f"{gen}: autoscaled fleetopt whole-day tok/W "
+                         f"{a:.3f} < static {s:.3f}")
+    bad = [f"{r['generation']}/{r['topology']}/{r['provisioning']}"
+           f" ({r['peak_ttft_p99_s']:.3f}s)"
+           for r in rows if r["peak_ttft_p99_s"] > 0.5]
+    if bad:
+        fails.append("peak-window TTFT p99 > 500 ms: " + ", ".join(bad))
+    return fails
+
+
+def main(argv=None) -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI config (the committed-baseline config)")
+    ap.add_argument("--peak-rate", type=float, default=500.0)
+    ap.add_argument("--day-s", type=float, default=480.0)
+    ap.add_argument("--slo-requests", type=int, default=3000)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", metavar="PATH", default=None)
+    args = ap.parse_args(argv)
+    if args.quick:
+        peak, day, n_slo = 250.0, 240.0, 1500
+    else:
+        peak, day, n_slo = args.peak_rate, args.day_s, args.slo_requests
+    rows, derived = run(peak_rate=peak, day_s=day, slo_requests=n_slo,
+                        seed=args.seed, quick=args.quick)
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump({"meta": dict(peak_rate=peak, day_s=day,
+                                    slo_requests=n_slo, seed=args.seed,
+                                    quick=args.quick),
+                       "rows": rows}, fh, indent=1)
+    hdr = (f"{'gen':5s} {'topology':10s} {'prov':11s} {'tok/W':>7s}"
+           f" {'idle%':>6s} {'ttft_p99':>9s} {'peak_ttft':>10s}"
+           f" {'inst(peak)':>11s} {'avg_online':>11s}")
+    print("=== Table F: diurnal day, static vs autoscaled ===")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['generation']:5s} {r['topology']:10s}"
+              f" {r['provisioning']:11s} {r['tok_per_watt']:7.3f}"
+              f" {100 * r['idle_energy_frac']:6.1f}"
+              f" {r['ttft_p99_s']:9.3f} {r['peak_ttft_p99_s']:10.3f}"
+              f" {r['instances_peak']:11d} {r['avg_online_instances']:11.2f}")
+    print(derived)
+    fails = gate(rows)
+    if fails:
+        sys.exit("ACCEPTANCE FAIL: " + "; ".join(fails))
+
+
+if __name__ == "__main__":
+    main()

@@ -23,14 +23,22 @@ Two modes:
 
    Accepts both the bench's {"meta", "rows"} dump and the bare row list
    `benchmarks/run.py` writes.  A cell is keyed by
-   (table, generation, workload, topology, dispatch_ms, misroute_rate) —
-   the last two disambiguate the model-heterogeneous Table D sweep cells
-   and are empty for every other row — plus the row's `spec_hash` when it
-   carries one (searched-fleet rows from topology_search_bench.py: the
-   stable TopologySpec hash keeps two different searched topologies from
-   colliding in one cell); its metric is the row's primary tok/W field
-   (`simulated` for measured tables, `slo_feasible` for SLO tables; both
-   when a row carries both).
+   (table, generation, workload, topology, provisioning, dispatch_ms,
+   misroute_rate) — `provisioning` splits Table F's static vs autoscaled
+   rows, `dispatch_ms`/`misroute_rate` disambiguate the
+   model-heterogeneous Table D sweep cells; each is empty for rows that
+   don't carry the field (keys are computed identically from both files,
+   so adding a key field never perturbs existing baselines) — plus the
+   row's `spec_hash` when it carries one (searched-fleet rows from
+   topology_search_bench.py: the stable TopologySpec hash keeps two
+   different searched topologies from colliding in one cell); its metric
+   is the row's primary tok/W field (`simulated` for measured tables,
+   `slo_feasible` for SLO tables; both when a row carries both).
+
+   When `$GITHUB_STEP_SUMMARY` is set (GitHub Actions), the per-cell
+   diff table is additionally appended there as job-summary markdown,
+   worst delta first, so a red perf job shows its damage without
+   digging through logs.
 
 3. Wall-clock budget gate (CI, alongside --fleet): diff the bench's
    timing dump (`fleet_sim_bench.py --time`, rows of
@@ -54,6 +62,7 @@ Two modes:
 """
 import argparse
 import json
+import os
 import sys
 
 # tok/W metrics gated per row: measured (simulated) and SLO-constrained
@@ -89,7 +98,7 @@ def _fleet_cells(path: str) -> dict:
             continue
         key = "/".join(str(r.get(k, "")) for k in
                        ("table", "generation", "workload", "topology",
-                        "dispatch_ms", "misroute_rate"))
+                        "provisioning", "dispatch_ms", "misroute_rate"))
         # searched-fleet rows (benchmarks/topology_search_bench.py) carry
         # a TopologySpec hash: two different searched topologies must
         # never collapse into one diff cell
@@ -172,6 +181,55 @@ def wall_budget_diff(base_path: str, cur_path: str,
                 ok=ratio <= budget or under_floor)
 
 
+def summary_markdown(rep: dict, wall: dict = None,
+                     title: str = "tok/W regression gate") -> str:
+    """GitHub job-summary markdown for a `fleet_diff` report: per-cell
+    table sorted worst delta first (regressions top the page), then
+    missing/new cells and the wall-clock budget verdict.  Pure function
+    of the report dicts so the emitter is unit-testable without a runner
+    environment."""
+    ok = rep["ok"] and (wall is None or wall.get("ok", True))
+    lines = [f"## {title}: {'✅ ok' if ok else '❌ FAIL'}",
+             "",
+             f"tolerance ±{rep['tolerance_pct']:g}% · "
+             f"{len(rep['cells'])} cells compared",
+             "",
+             "| cell | baseline | current | Δ% |",
+             "| --- | ---: | ---: | ---: |"]
+    for c in sorted(rep["cells"], key=lambda c: c["delta_pct"]):
+        flag = " ⚠️" if abs(c["delta_pct"]) > rep["tolerance_pct"] else ""
+        lines.append(f"| `{c['cell']}` | {c['baseline']:g} |"
+                     f" {c['current']:g} | {c['delta_pct']:+.2f}%{flag} |")
+    if rep["missing_in_current"]:
+        lines += ["", "**Missing from current run:**"]
+        lines += [f"- `{k}`" for k in rep["missing_in_current"]]
+    if rep["new_in_current"]:
+        lines += ["", "**New cells (not in baseline):**"]
+        lines += [f"- `{k}`" for k in rep["new_in_current"]]
+    if wall is not None:
+        lines += ["", "### wall-clock budget"]
+        if wall.get("config_mismatch"):
+            lines.append(f"❌ config mismatch: baseline"
+                         f" `{wall['baseline_config']}` vs current"
+                         f" `{wall['current_config']}`")
+        else:
+            lines.append(
+                f"{'✅' if wall['ok'] else '❌'} total "
+                f"{wall['current_total_s']:.1f}s vs baseline "
+                f"{wall['baseline_total_s']:.1f}s "
+                f"({wall['ratio']:.2f}x, budget {wall['budget']:g}x)")
+    return "\n".join(lines) + "\n"
+
+
+def _emit_step_summary(rep: dict, wall: dict = None,
+                       title: str = "tok/W regression gate") -> None:
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    with open(path, "a") as fh:
+        fh.write(summary_markdown(rep, wall, title=title) + "\n")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--fleet", action="store_true",
@@ -191,6 +249,10 @@ def main(argv=None) -> None:
                     help="absolute grace floor: a current total under this"
                          " many seconds passes the wall budget regardless"
                          " of ratio (start-up jitter dominates tiny runs)")
+    ap.add_argument("--summary-title", default="tok/W regression gate",
+                    help="heading for the $GITHUB_STEP_SUMMARY markdown "
+                         "(distinguishes multiple perf_diff steps in one "
+                         "job summary)")
     ap.add_argument("baseline")
     ap.add_argument("current")
     args = ap.parse_args(argv)
@@ -201,6 +263,7 @@ def main(argv=None) -> None:
                      tolerance_pct=args.tolerance)
     print(json.dumps(rep, indent=2))
     wall_fail = None
+    wrep = None
     if args.wall_budget is not None:
         if not (args.bench_baseline and args.bench_current):
             sys.exit("--wall-budget needs --bench-baseline and"
@@ -221,6 +284,7 @@ def main(argv=None) -> None:
                          f"({wrep['ratio']:.2f}x > budget "
                          f"{args.wall_budget:g}x); regenerate the "
                          f"baseline only for a deliberate slowdown")
+    _emit_step_summary(rep, wrep, title=args.summary_title)
     if not rep["ok"] or wall_fail:
         regressed = [c for c in rep["out_of_tolerance"]
                      if c["delta_pct"] < 0]

@@ -14,12 +14,13 @@ RESULTS = pathlib.Path(__file__).resolve().parent / "results"
 
 
 def _suites():
-    from . import (beyond_paper, engine_bench, extra_sweeps, fleet_grid_bench,
-                   fleet_sim_bench, kernel_bench, roofline_report,
-                   table1_context_law, table2_model_archs,
-                   table3_fleet_topology, table4_semantic_routing,
-                   table5_gpu_generations, table6_archetypes,
-                   table7_power_params, topology_search_bench)
+    from . import (beyond_paper, engine_bench, extra_sweeps,
+                   fleet_diurnal_bench, fleet_grid_bench, fleet_sim_bench,
+                   kernel_bench, roofline_report, table1_context_law,
+                   table2_model_archs, table3_fleet_topology,
+                   table4_semantic_routing, table5_gpu_generations,
+                   table6_archetypes, table7_power_params,
+                   topology_search_bench)
     return {
         # harness_run also records the full-run wall-clock trajectory to
         # results/BENCH_fleet_sim_full.json (the committed quick-config
@@ -33,6 +34,10 @@ def _suites():
         # the committed --quick baseline results/topology_search.json is
         # likewise refreshed only by a deliberate bench --quick --json run
         "topology_search": topology_search_bench.harness_run,
+        # Table F diurnal day, static vs autoscaled; the committed
+        # --quick baseline results/fleet_diurnal.json follows the same
+        # deliberate-refresh rule
+        "fleet_diurnal": fleet_diurnal_bench.harness_run,
         "table1_context_law": table1_context_law.run,
         "table2_model_archs": table2_model_archs.run,
         "table3_fleet_topology": table3_fleet_topology.run,

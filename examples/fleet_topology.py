@@ -15,7 +15,11 @@ compliance frontier), including a K = 3 multipool ladder and a
 disaggregated fleet whose prefill/decode sides re-provision
 independently (§10.3) — and closes with the declarative topology IR
 (DESIGN.md §12): a custom mixed-generation spec built by hand from raw
-PoolSpecs and an optimize_topology search over the spec space on Azure.
+PoolSpecs and an optimize_topology search over the spec space on Azure —
+and finally a compressed diurnal day (DESIGN.md §13): the same
+SLO-sized fleet serving an Azure-style day/night envelope static vs
+autoscaled, whole-day tok/W measured with every scale-up lag, weight
+load and warm spare charged.
 
   PYTHONPATH=src python examples/fleet_topology.py [--sim-requests N]
 """
@@ -180,6 +184,43 @@ def declarative_topology_ir(n_requests: int = 2000) -> None:
           f" TTFT p99 {res.best_result.ttft_p99_s:.3f}s)")
 
 
+def diurnal_autoscaling(peak_rate: float = 150.0, day_s: float = 160.0):
+    """A compressed diurnal day, static vs autoscaled (DESIGN.md §13)."""
+    import dataclasses
+
+    from repro.core import AutoscalePolicy, TopologySpec
+    from repro.core.workloads import DiurnalProfile
+    from repro.serving import prepare_spec, sample_diurnal_trace
+
+    print(f"\n=== diurnal day (peak {peak_rate:g}/s compressed into "
+          f"{day_s:g}s), static vs autoscaled ===")
+    dprof = DiurnalProfile(peak_rate=peak_rate, day_s=day_s)
+    wl = dataclasses.replace(AZURE, arrival_rate=peak_rate)
+    pol = AutoscalePolicy(control_interval_s=day_s / 40.0,
+                          target_utilization=0.7,
+                          scaleup_lag_s=day_s / 120.0,
+                          scaledown_delay_s=day_s / 13.0, min_frac=0.2,
+                          spare_instances=0)
+    spec = dataclasses.replace(
+        TopologySpec.from_kind("fleetopt", H100_LLAMA70B, LLAMA31_70B,
+                               b_short=4096), autoscale=pol)
+    trace = sample_diurnal_trace(wl, dprof, day_s, seed=0,
+                                 max_total=spec.max_window)
+    for autoscale in (False, True):
+        sim, reqs, plan = prepare_spec(spec, wl, seed=0, trace=trace,
+                                       autoscale=autoscale)
+        f = sim.run(reqs, warmup_frac=0.0)["fleet"]
+        mode = "autoscaled" if autoscale else "static    "
+        online = ""
+        if sim.schedules:
+            avg = sum(s.online_instance_seconds(0.0, sim._window[1])
+                      for s in sim.schedules.values()) / sim._window[1]
+            online = f", avg {avg:.1f}/{plan.instances} instances online"
+        print(f"  {mode}: {f['tok_per_watt']:5.2f} tok/W whole-day "
+              f"(idle {100 * f['idle_energy_frac']:.0f}% of energy, "
+              f"{f['completed']} completed{online})")
+
+
 def main(sim_requests: int = 4000):
     tpw = {}
     print("=== Table 3: fleet tok/W ===")
@@ -226,6 +267,7 @@ def main(sim_requests: int = 4000):
     model_heterogeneous_serving(n_requests=sim_requests)
     slo_constrained_sizing(n_requests=max(sim_requests // 2, 1000))
     declarative_topology_ir(n_requests=max(sim_requests // 2, 1000))
+    diurnal_autoscaling()
 
 
 if __name__ == "__main__":

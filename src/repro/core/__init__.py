@@ -19,11 +19,12 @@ Public API surface (see DESIGN.md §2):
   moe        — active-parameter streaming + dispatch sensitivity
   analyzer   — fleet_tpw_analysis (Appendix B API)
 """
-from . import (adaptive, analyzer, carbon, disagg, fleet, hardware, kvcache,
-               law, modelspec, moe, multipool, power, profiles, roofline,
-               routing, slo, speculative, tokenomics, topo_search, topospec,
-               workloads)
+from . import (adaptive, analyzer, autoscale, carbon, disagg, fleet,
+               hardware, kvcache, law, modelspec, moe, multipool, power,
+               profiles, roofline, routing, slo, speculative, tokenomics,
+               topo_search, topospec, workloads)
 from .adaptive import AdaptiveController
+from .autoscale import AutoscalePolicy
 from .carbon import GRIDS, EnergyBill, GridProfile, bill
 from .disagg import Disaggregated
 from .fleet import PoolOverride
@@ -44,6 +45,7 @@ from .profiles import (B200_LLAMA70B, B200_LLAMA70B_FLEET, GB200_LLAMA70B,
 from .roofline import DecodeRoofline
 from .routing import FleetOpt, Homogeneous, Semantic, TwoPool, optimize_gamma
 from .tokenomics import context_sweep, fleet_tok_per_watt, single_gpu_tok_per_watt
-from .workloads import AGENT, AZURE, LMSYS, WORKLOADS, Workload
+from .workloads import (AGENT, AZURE, AZURE_DIURNAL, LMSYS, WORKLOADS,
+                        DiurnalProfile, Workload)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

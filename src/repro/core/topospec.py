@@ -53,6 +53,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .autoscale import AutoscalePolicy
 from .fleet import PREFILL_MFU, FleetReport, PoolSizing
 from .modelspec import LLAMA31_8B, ModelSpec
 from .moe import with_dispatch_floor
@@ -133,6 +134,13 @@ class TopologySpec:
     b_short: int = 4096
     gamma: float = 2.0
     label: str = ""
+    # opt-in autoscaling policy (core.autoscale) for non-stationary
+    # traffic runs.  `provision()` / the SLO loop ALWAYS size for peak
+    # regardless — the knob only parameterises a FleetSim that was
+    # explicitly asked to autoscale (prepare_spec(..., autoscale=True)),
+    # so steady-state provisioning, sizing and committed baselines are
+    # untouched by its presence.
+    autoscale: Optional["AutoscalePolicy"] = None
 
     # --- construction-time validation -----------------------------------
     def __post_init__(self):
@@ -311,6 +319,11 @@ class TopologySpec:
                    round(sp.dispatch_ms, 6), sp.prefill_engine_mfu)
                   for sp in self.pools),
         )
+        # appended ONLY when set: every pre-existing spec's hash — and
+        # with it every committed topology_search.json cell key — is
+        # unchanged by the autoscale knob's existence
+        if self.autoscale is not None:
+            canon = canon + (self.autoscale.canon(),)
         return hashlib.sha1(repr(canon).encode()).hexdigest()[:12]
 
     # --- provisioning ----------------------------------------------------

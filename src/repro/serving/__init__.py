@@ -1,3 +1,4 @@
+from .autoscale import Autoscaler, AutoscalePolicy, InstanceSchedule
 from .energy import EnergyMeter, MeterBank
 from .engine import (DrainTruncatedError, PoolEngine, resolve_prefill_chunk,
                      scaled_prefill_chunk)
@@ -6,12 +7,13 @@ from .fleetsim import (FleetSim, PoolGroup, PoolSummary, SimVsAnalytical,
                        prepare_spec, prepare_topology, run_fleet_grid,
                        simulate_spec, simulate_topology, trace_requests)
 from .models import ModelBinding, ModelProfileRegistry
-from .request import Request, synthetic_requests
+from .request import Request, sample_diurnal_trace, synthetic_requests
 from .router import SEMANTIC_KINDS, ContextRouter, RouterPolicy
 from .soa import BatchedPoolEngine
 
 __all__ = ["EnergyMeter", "MeterBank", "PoolEngine", "BatchedPoolEngine",
-           "Request", "synthetic_requests",
+           "Request", "synthetic_requests", "sample_diurnal_trace",
+           "Autoscaler", "AutoscalePolicy", "InstanceSchedule",
            "ContextRouter", "RouterPolicy", "FleetSim", "PoolGroup",
            "PoolSummary",
            "SimVsAnalytical", "analytical_decode_tok_per_watt",

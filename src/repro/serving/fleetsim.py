@@ -60,6 +60,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.autoscale import AutoscalePolicy
 from repro.core.disagg import HANDOFF_J_PER_BYTE, INTERCONNECT_BPS
 from repro.core.fleet import FleetReport, PoolOverride
 from repro.core.modelspec import ModelSpec
@@ -68,6 +69,7 @@ from repro.core.routing import LONG_WINDOW
 from repro.core.topospec import TopologySpec, plan_roles
 from repro.core.workloads import Workload
 
+from .autoscale import Autoscaler, InstanceSchedule
 from .engine import scaled_prefill_chunk
 from .models import ModelProfileRegistry
 from .request import (Request, latency_percentiles as _percentiles,
@@ -186,6 +188,10 @@ class PoolSummary:
     n_escalated: int
     n_handoffs: int
     outbox: Dict[str, List[Request]]  # dest role -> request snapshots
+    # autoscaled pools: per-row retire times (serving.autoscale) — the
+    # fleet roll-up stops charging a row's trailing idle at its retire
+    # time instead of the window end.  None = always-on (steady state).
+    online_until: Optional[np.ndarray] = None
 
 
 class PoolGroup:
@@ -212,7 +218,22 @@ class PoolGroup:
         return self.engine.instances
 
     def submit(self, req: Request) -> None:
-        i = int(np.argmin(self._pending))
+        eng = self.engine
+        if eng.online_from is not None:
+            # autoscaled pool: balance only over the rows whose online
+            # window covers the request's ready time (a retired or
+            # not-yet-started incarnation cannot admit).  The controller
+            # keeps >= 1 row always online; the fallbacks below are
+            # belt-and-braces, not a load-bearing path.
+            t = eng._ready(req)
+            elig = (eng.online_from <= t) & (t < eng.online_until)
+            if not elig.any():
+                elig = eng.online_from <= t
+            if not elig.any():
+                elig = np.ones(eng.instances, bool)
+            i = int(np.argmin(np.where(elig, self._pending, np.inf)))
+        else:
+            i = int(np.argmin(self._pending))
         self._pending[i] += req.prompt_len if self.phase == "prefill" \
             else req.predicted_total
         self.engine.submit(req, i)
@@ -275,7 +296,18 @@ class PoolGroup:
         joules = float(b.joules.sum())
         slot_s = float(eng.slot_seconds.sum())
         avail = eng.n_slots * float(b.sim_time_s.sum())
+        extra = {}
+        if eng.online_from is not None:
+            # autoscaled pool: mean live instance count over the
+            # measurement window (the steady-state path adds no keys, so
+            # committed baseline stats are byte-identical)
+            span = max(b.measure_t1 - b.measure_t0, 1e-9)
+            lo = np.maximum(eng.online_from, b.measure_t0)
+            hi = np.minimum(eng.online_until, b.measure_t1)
+            extra["avg_online_instances"] = round(
+                float(np.maximum(0.0, hi - lo).sum()) / span, 2)
         return dict(role=self.role,
+                    **extra,
                     phase=self.phase,
                     window=eng.window,
                     instances=eng.instances,
@@ -329,7 +361,9 @@ class PoolGroup:
             ttft_role=np.array([role_idx.get(r.prefill_role, own)
                                 for r in comp], np.int64),
             n_overflowed=n_overflowed, n_escalated=n_escalated,
-            n_handoffs=n_handoffs, outbox=outbox)
+            n_handoffs=n_handoffs, outbox=outbox,
+            online_until=None if eng.online_until is None
+            else eng.online_until.copy())
         return self.summary
 
 
@@ -351,9 +385,16 @@ class FleetSim:
                  rng_seed: int = 0,
                  kv_interconnect_Bps: float = INTERCONNECT_BPS,
                  kv_handoff_j_per_byte: float = HANDOFF_J_PER_BYTE,
-                 engine: str = "numpy"):
+                 engine: str = "numpy",
+                 autoscale: Optional[AutoscalePolicy] = None):
         self.policy = policy
         self.plan = plan
+        self.autoscale = autoscale
+        if autoscale is not None and engine != "numpy":
+            # the jitted drain (serving.jax_engine) initialises every
+            # row's clock to zero inside the compiled while_loop, so
+            # per-row online offsets would be silently dropped
+            raise ValueError("autoscale requires the numpy engine")
         if engine == "numpy":
             engine_cls = BatchedPoolEngine
         elif engine == "jax":
@@ -401,6 +442,8 @@ class FleetSim:
                 dest = spec_by_role[dest].overflow_to
             return dest
 
+        self._plan_by_role: Dict[str, object] = dict(roles)
+        self._engine_kwargs: Dict[str, dict] = {}
         for role, p in roles:
             sp = spec_by_role[role]
             # Overflow headroom ends at the pool window: a request routed
@@ -413,7 +456,7 @@ class FleetSim:
             binding = registry.for_role(role)
             chunk = scaled_prefill_chunk(p.profile, prefill_chunk) \
                 if prefill_chunk else prefill_chunk
-            engine = engine_cls(
+            kwargs = dict(
                 instances=max(p.instances, 1), window=p.window,
                 profile=p.profile, name=p.name,
                 prefill_chunk=chunk, phase=p.phase,
@@ -422,7 +465,10 @@ class FleetSim:
                 streamed_params=binding.streamed_params,
                 dispatch_ms=binding.dispatch_ms,
                 rng_seed=rng_seed)
-            self.groups[role] = PoolGroup(role, engine)
+            # kept so the autoscaler can rebuild the pool with one row
+            # per planned incarnation (serving.autoscale)
+            self._engine_kwargs[role] = kwargs
+            self.groups[role] = PoolGroup(role, engine_cls(**kwargs))
         # cross-pool edges, read straight off the spec's pools (all point
         # forward in `order` — validated at spec construction):
         #   handoff_to  — prefill role -> its slice's decode role
@@ -456,6 +502,8 @@ class FleetSim:
         self._window: Tuple[float, float] = (0.0, float("inf"))
         self.summaries: Dict[str, PoolSummary] = {}
         self.fresh_roles: List[str] = []
+        # role -> InstanceSchedule planned by the autoscaler this run
+        self.schedules: Dict[str, InstanceSchedule] = {}
 
     # simulated seconds served across every FleetSim.run in this process
     # (per-run horizon = the last arrival).  Instrumentation for the
@@ -505,6 +553,8 @@ class FleetSim:
                 self._window
         for r in reqs:
             self.router.route(r)
+        if self.autoscale is not None:
+            self._apply_autoscale()
         self.summaries = {}
         self.fresh_roles = []
         # topological order: cross-pool flow (overflow migrations and KV
@@ -514,6 +564,43 @@ class FleetSim:
             reuse=reuse or {},
             role_idx={r: k for k, r in enumerate(self.order)},
             inbox={role: [] for role in self.order})
+
+    def _apply_autoscale(self) -> None:
+        """Replace each pool's peak-provisioned engine with an
+        incarnation-per-row engine planned by the reactive autoscaler
+        (serving.autoscale).  Runs inside `begin_run`, after primary
+        routing (each pool's queues hold exactly its routed ingress —
+        the controller's arrival-rate signal) and before any engine has
+        stepped, so the rebuild replays the identical submissions onto
+        the scheduled rows."""
+        scaler = Autoscaler(self.autoscale)
+        horizon = self._window[1]
+        for role in self.order:
+            grp = self.groups[role]
+            eng = grp.engine
+            routed = [r for q in eng.queues for r in q]
+            times = [BatchedPoolEngine._ready(r) for r in routed]
+            plan = self._plan_by_role[role]
+            rate_per_inst = plan.arrival_rate / max(plan.instances, 1)
+            binding = self.registry.for_role(role)
+            load_s = binding.model.weight_bytes(active_only=False) \
+                / self.autoscale.weight_load_Bps
+            sched = scaler.plan_pool(
+                times, n_peak=eng.instances,
+                rate_per_instance=rate_per_inst,
+                horizon_s=horizon, load_s=load_s)
+            self.schedules[role] = sched
+            kwargs = dict(self._engine_kwargs[role],
+                          instances=sched.n_rows)
+            new_eng = BatchedPoolEngine(**kwargs)
+            new_eng.bank.measure_t0, new_eng.bank.measure_t1 = self._window
+            new_eng.set_online_windows(sched.online_from,
+                                       sched.online_until,
+                                       load_s=sched.load_s)
+            new_grp = PoolGroup(role, new_eng)
+            self.groups[role] = new_grp    # the router reads this dict
+            for r in sorted(routed, key=BatchedPoolEngine._ready):
+                new_grp.submit(r)
 
     def pre_role(self, role: str) -> Optional[BatchedPoolEngine]:
         """Inject the role's inbox and time-sort its queues; returns the
@@ -645,11 +732,15 @@ class FleetSim:
             handoff_b += s.m_handoff_bytes
             dispatch_j += s.m_dispatch_joules
         # engines that sat idle past the window end never saw those idle
-        # watts: charge the gap so the fleet denominator is wall-clock honest
+        # watts: charge the gap so the fleet denominator is wall-clock
+        # honest.  An autoscaled row's gap ends at its retire time — a
+        # powered-off incarnation draws nothing.
         t0, t1 = self._window
         for role in self.order:
             s = self.summaries[role]
-            gap = np.maximum(0.0, t1 - np.maximum(s.sim_times, t0))
+            cap = t1 if s.online_until is None \
+                else np.minimum(t1, s.online_until)
+            gap = np.maximum(0.0, cap - np.maximum(s.sim_times, t0))
             extra = s.p_idle_w * float(gap.sum())
             joules += extra
             idle_j += extra
@@ -737,24 +828,39 @@ def prepare_spec(spec: TopologySpec, workload: Workload, *,
                  arrival_rate: Optional[float] = None,
                  prefill_chunk: int = 512,
                  pool_overrides: Optional[Dict[str, PoolOverride]] = None,
-                 engine: str = "numpy"):
+                 engine: str = "numpy",
+                 trace: Optional[List[Tuple[int, int, float]]] = None,
+                 autoscale: bool = False):
     """Provision a `TopologySpec` analytically and synthesise its trace;
     returns `(sim, reqs, plan)` ready for `sim.run(reqs)` — the common
     front half of `simulate_spec`, split out so the grid driver (and the
     SLO / topology-search loops) can prepare many scenarios before
     batch-draining them.  The trace's clipping bound is the spec's largest
-    serve window (`spec.max_window`) — no per-kind special cases."""
+    serve window (`spec.max_window`) — no per-kind special cases.
+
+    `trace` supplies pre-sampled (prompt, output, arrival) triples — the
+    diurnal bench's non-stationary arrivals (`sample_diurnal_trace`) —
+    instead of the steady Poisson default.  `autoscale=True` opts the
+    sim into the spec's `autoscale` policy (or the default
+    `AutoscalePolicy` if the spec carries none); the sizing plan itself
+    is *always* peak-provisioned — the SLO loop sizes at
+    `workload.arrival_rate` and never autoscales, per the spec contract.
+    """
     if arrival_rate is not None and arrival_rate != workload.arrival_rate:
         workload = dataclasses.replace(workload, arrival_rate=arrival_rate)
     policy, plan, registry = spec.build(workload,
                                         pool_overrides=pool_overrides)
+    as_policy = None
+    if autoscale:
+        as_policy = spec.autoscale if spec.autoscale is not None \
+            else AutoscalePolicy()
     sim = FleetSim(policy, plan, registry=registry,
                    prefill_chunk=prefill_chunk, rng_seed=seed,
-                   engine=engine)
+                   engine=engine, autoscale=as_policy)
     sim.workload_name = workload.name     # grid-driver report labels
     sim.topology_kind = spec.kind
     reqs = trace_requests(workload, n_requests, seed=seed,
-                          max_total=spec.max_window)
+                          max_total=spec.max_window, trace=trace)
     return sim, reqs, plan
 
 

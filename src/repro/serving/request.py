@@ -83,6 +83,27 @@ def sample_trace(workload, n: int, *, seed: int = 0, max_total: int = 4096,
     return out
 
 
+def sample_diurnal_trace(workload, profile, t_end: float, *, seed: int = 0,
+                         max_total: int = 4096,
+                         ) -> List[Tuple[int, int, float]]:
+    """(prompt_len, output_len, arrival_time) triples under a
+    `core.workloads.DiurnalProfile` envelope on [0, t_end).
+
+    Arrival *times* come from the profile's exact time-rescaled
+    non-homogeneous Poisson sampler; lengths reuse the same
+    `workload.sample_requests` path and clipping rule as `sample_trace`,
+    so the steady-state and diurnal layers can never diverge on the
+    length distribution."""
+    ts = profile.sample_arrivals(t_end, seed=seed)
+    lens = workload.sample_requests(len(ts), seed=seed)
+    out = []
+    for i, (p, o) in enumerate(lens):
+        p = int(min(p, max_total - 1))
+        o = int(min(o, max_total - p))
+        out.append((max(p, 1), max(o, 1), float(ts[i])))
+    return out
+
+
 def synthetic_requests(workload, n: int, vocab: int, *, seed: int = 0,
                        max_total: int = 4096) -> List[Request]:
     """Draw (prompt_len, output_len) from a core.workloads trace and attach

@@ -118,6 +118,11 @@ class BatchedPoolEngine:
         self.escalated: List[List[Request]] = [[] for _ in range(I)]
         self.handoff: List[List[Request]] = [[] for _ in range(I)]
         self.relayed: List[List[Request]] = [[] for _ in range(I)]
+        # autoscaling (serving.autoscale): per-row online windows.  None
+        # (the default) means every row is online for the whole run —
+        # the exact pre-autoscale behaviour, down to the float ops.
+        self.online_from: Optional[np.ndarray] = None
+        self.online_until: Optional[np.ndarray] = None
         # admission bookkeeping, built by _freeze() at run start
         self.qpos = np.zeros(I, np.int64)
         self.qlen = np.zeros(I, np.int64)
@@ -136,6 +141,29 @@ class BatchedPoolEngine:
     def submit(self, req: Request, instance: int) -> None:
         req.pool = f"{self.name}#{instance}"
         self.queues[instance].append(req)
+
+    def set_online_windows(self, online_from, online_until, *,
+                           load_s: float = 0.0) -> None:
+        """Configure per-row `[online_from, online_until)` availability
+        (serving.autoscale).  Each row's clock starts at its online time
+        — the hours before a scale-up incarnation exists are simply
+        never simulated, so no idle accrues for them — and every live
+        late-start row is charged `load_s` of weight-streaming idle draw
+        ending exactly at its online instant.  Call after the bank's
+        measurement window is set (the load charge pro-rates against
+        it) and before any submission."""
+        self.online_from = np.asarray(online_from, np.float64)
+        self.online_until = np.asarray(online_until, np.float64)
+        if self.online_from.shape != (self.instances,) \
+                or self.online_until.shape != (self.instances,):
+            raise ValueError("online windows must be (instances,) arrays")
+        self.bank.sim_time_s[:] = np.maximum(self.online_from, 0.0)
+        live = (self.online_from > 0) \
+            & (self.online_until > self.online_from)
+        if load_s > 0 and live.any():
+            rows = np.flatnonzero(live)
+            self.bank.sim_time_s[rows] = self.online_from[rows] - load_s
+            self.bank.charge_idle_rows(rows, np.full(rows.size, load_s))
 
     def sort_queues(self) -> None:
         """Stable time-sort every instance queue (head-gated admission) —

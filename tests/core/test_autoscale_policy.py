@@ -1,0 +1,60 @@
+"""AutoscalePolicy is declarative config riding the topology IR: the
+knob must be hash-neutral when unset (committed baseline cell keys may
+never move) and hash-active when set (two fleets that autoscale
+differently are different topologies)."""
+import dataclasses
+
+import pytest
+
+from repro.core.autoscale import AutoscalePolicy
+from repro.core.modelspec import LLAMA31_70B
+from repro.core.profiles import H100_LLAMA70B
+from repro.core.topospec import TopologySpec
+
+
+def _spec():
+    return TopologySpec.from_kind("fleetopt", H100_LLAMA70B, LLAMA31_70B,
+                                  b_short=4096)
+
+
+def test_spec_hash_pinned_without_autoscale():
+    """Regression pin: the hash of a plain from_kind spec predates the
+    autoscale field and must never move (it keys committed
+    topology_search.json baseline cells)."""
+    assert _spec().spec_hash == "73e182db6026"
+
+
+def test_autoscale_changes_spec_hash_only_when_set():
+    base = _spec()
+    assert dataclasses.replace(base, autoscale=None).spec_hash \
+        == base.spec_hash
+    scaled = dataclasses.replace(base, autoscale=AutoscalePolicy())
+    assert scaled.spec_hash != base.spec_hash
+    # and different policies hash differently
+    other = dataclasses.replace(
+        base, autoscale=AutoscalePolicy(target_utilization=0.5))
+    assert other.spec_hash != scaled.spec_hash
+
+
+def test_policy_canon_covers_every_field():
+    """canon() must include every policy field (a knob missing from the
+    canon would let two different policies collide in one spec_hash)."""
+    pol = AutoscalePolicy()
+    canon = pol.canon()
+    for f in dataclasses.fields(pol):
+        assert getattr(pol, f.name) in canon, f.name
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        AutoscalePolicy(control_interval_s=0.0)
+    with pytest.raises(ValueError):
+        AutoscalePolicy(target_utilization=1.2)
+    with pytest.raises(ValueError):
+        AutoscalePolicy(scaleup_lag_s=-1.0)
+    with pytest.raises(ValueError):
+        AutoscalePolicy(min_frac=1.5)
+    with pytest.raises(ValueError):
+        AutoscalePolicy(weight_load_Bps=0.0)
+    with pytest.raises(ValueError):
+        AutoscalePolicy(spare_instances=-1)

@@ -1,0 +1,94 @@
+"""Schema pins for the bench harness contracts CI leans on.
+
+The `--time` timing dump of fleet_sim_bench feeds perf_diff's
+wall-clock budget gate, and the Table F gate function feeds the diurnal
+acceptance step — both are consumed by code that never imports the
+bench, so their shapes are pinned here."""
+import importlib.util
+import os
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+
+def _load(name):
+    spec = importlib.util.spec_from_file_location(
+        name, os.path.join(ROOT, "benchmarks", f"{name}.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+fleet_sim_bench = _load("fleet_sim_bench")
+fleet_diurnal_bench = _load("fleet_diurnal_bench")
+
+
+def test_table_timer_row_schema_is_pinned():
+    """Every timing row is exactly {table, config, wall_s,
+    sim_s_per_wall_s} — perf_diff.wall_budget_diff keys on all four."""
+    cfg = dict(quick=True, n_requests=7, slo_requests=3, seed=0)
+    timer = fleet_sim_bench._TableTimer(cfg)
+    timer.lap("unconstrained")
+    timer.lap("slo")
+    timer.total()
+    assert [r["table"] for r in timer.rows] \
+        == ["unconstrained", "slo", "total"]
+    for r in timer.rows:
+        assert set(r) == {"table", "config", "wall_s", "sim_s_per_wall_s"}
+        assert r["config"] is cfg
+        assert isinstance(r["wall_s"], float) and r["wall_s"] >= 0.0
+        assert isinstance(r["sim_s_per_wall_s"], float)
+
+
+def test_timer_laps_are_disjoint_but_total_spans():
+    timer = fleet_sim_bench._TableTimer(dict(quick=True))
+    timer.lap("a")
+    timer.lap("b")
+    timer.total()
+    a, b, tot = (r["wall_s"] for r in timer.rows)
+    assert tot == pytest.approx(a + b, abs=0.05)
+
+
+# --- Table F gate -------------------------------------------------------
+
+def _cells(tweaks=None):
+    rows = []
+    for gen, _ in fleet_diurnal_bench.GENERATIONS:
+        for kind in fleet_diurnal_bench.KINDS:
+            for prov in ("static", "autoscaled"):
+                rows.append(dict(generation=gen, topology=kind,
+                                 provisioning=prov, tok_per_watt=5.0,
+                                 peak_ttft_p99_s=0.3))
+    for (gen, kind, prov), kv in (tweaks or {}).items():
+        next(r for r in rows if (r["generation"], r["topology"],
+                                 r["provisioning"]) == (gen, kind, prov)
+             ).update(kv)
+    return rows
+
+
+def test_gate_green_on_healthy_rows():
+    assert fleet_diurnal_bench.gate(_cells()) == []
+
+
+def test_gate_trips_when_autoscaling_loses_tok_per_watt():
+    fails = fleet_diurnal_bench.gate(_cells(
+        {("H100", "fleetopt", "autoscaled"): dict(tok_per_watt=4.0)}))
+    assert len(fails) == 1 and "H100" in fails[0]
+    # but a non-fleetopt tok/W dip is reported by the diff step, not
+    # this gate (the knob must pay for itself where the headline lives)
+    assert fleet_diurnal_bench.gate(_cells(
+        {("H100", "homo", "autoscaled"): dict(tok_per_watt=4.0)})) == []
+
+
+def test_gate_trips_on_peak_ttft_violation_any_cell():
+    fails = fleet_diurnal_bench.gate(_cells(
+        {("B200", "multipool", "static"): dict(peak_ttft_p99_s=0.7)}))
+    assert len(fails) == 1
+    assert "B200/multipool/static" in fails[0]
+
+
+def test_kind_kwargs_cover_kinds():
+    assert set(fleet_diurnal_bench.KINDS) \
+        == set(fleet_diurnal_bench.KIND_KWARGS)

@@ -1,0 +1,96 @@
+"""DiurnalProfile: the envelope is exact, not sampled — rate_at /
+cumulative / the closed-form inverse must agree with each other to
+float precision, and arrival sampling must be a deterministic exact
+time-rescaled Poisson process (no thinning noise)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.workloads import AZURE_DIURNAL, DiurnalProfile
+
+
+def test_peak_normalisation_and_swing():
+    """The shape is normalised so `peak_rate` is the actual peak."""
+    p = DiurnalProfile(peak_rate=400.0, day_s=86400.0)
+    t = np.linspace(0.0, p.day_s, 100_001)
+    r = p.rate_at(t)
+    assert float(r.max()) == pytest.approx(400.0)
+    assert p.swing == pytest.approx(float(r.max() / r.min()), rel=1e-9)
+    assert p.swing == pytest.approx(5.0)        # Azure-style day/night
+    assert p.mean_rate < p.peak_rate
+
+
+def test_rate_is_periodic():
+    p = DiurnalProfile(peak_rate=100.0, day_s=240.0)
+    t = np.array([3.0, 117.0, 239.0])
+    np.testing.assert_allclose(p.rate_at(t), p.rate_at(t + 240.0),
+                               rtol=1e-12)
+    np.testing.assert_allclose(p.rate_at(t), p.rate_at(t + 3 * 240.0),
+                               rtol=1e-12)
+
+
+def test_cumulative_matches_numeric_integral():
+    p = DiurnalProfile(peak_rate=250.0, day_s=240.0)
+    t = np.linspace(0.0, 2.5 * p.day_s, 200_001)   # multi-day incl. wrap
+    numeric = np.concatenate(
+        [[0.0], np.cumsum((p.rate_at(t[:-1]) + p.rate_at(t[1:])) / 2.0
+                          * np.diff(t))])
+    np.testing.assert_allclose(p.cumulative(t), numeric, rtol=1e-6,
+                               atol=1e-3)
+
+
+def test_invert_roundtrips_cumulative():
+    p = DiurnalProfile(peak_rate=250.0, day_s=240.0)
+    t = np.linspace(0.0, p.day_s, 4001)[:-1]
+    np.testing.assert_allclose(p._invert(p.cumulative(t)), t, atol=1e-6)
+
+
+def test_sample_arrivals_deterministic_sorted_and_rate_correct():
+    p = DiurnalProfile(peak_rate=200.0, day_s=480.0)
+    a = p.sample_arrivals(480.0, seed=7)
+    b = p.sample_arrivals(480.0, seed=7)
+    np.testing.assert_array_equal(a, b)
+    assert (np.diff(a) > 0).all()
+    assert a[0] >= 0.0 and a[-1] < 480.0
+    # total count ~ Lambda(day); 5-sigma band on the Poisson total
+    lam = p.cumulative(np.array([480.0]))[0]
+    assert abs(len(a) - lam) < 5 * np.sqrt(lam)
+    # the empirical trough/peak ratio tracks the envelope's swing
+    hour = p.day_s / 24.0
+    peak_n = ((a >= 11 * hour) & (a < 13 * hour)).sum() / (2 * hour)
+    trough_n = ((a >= 3 * hour) & (a < 5 * hour)).sum() / (2 * hour)
+    assert peak_n / max(trough_n, 1e-9) > 3.0
+
+
+def test_sample_arrivals_different_seed_differs():
+    p = DiurnalProfile()
+    assert not np.array_equal(p.sample_arrivals(3600.0, seed=0),
+                              p.sample_arrivals(3600.0, seed=1))
+
+
+def test_day_compression_preserves_shape():
+    """Compressing the day rescales time, not the envelope."""
+    long = DiurnalProfile(peak_rate=100.0, day_s=86400.0)
+    short = DiurnalProfile(peak_rate=100.0, day_s=240.0)
+    frac = np.linspace(0.0, 1.0, 97)
+    np.testing.assert_allclose(long.rate_at(frac * 86400.0),
+                               short.rate_at(frac * 240.0), rtol=1e-12)
+
+
+def test_validation():
+    with pytest.raises(ValueError):
+        DiurnalProfile(peak_rate=0.0)
+    with pytest.raises(ValueError):
+        DiurnalProfile(day_s=-1.0)
+    with pytest.raises(ValueError):
+        DiurnalProfile(shape=(1.0,))
+    with pytest.raises(ValueError):
+        DiurnalProfile(shape=(1.0, 0.0, 0.5))
+
+
+def test_module_constant_is_frozen_default():
+    assert AZURE_DIURNAL.peak_rate == 1000.0
+    assert AZURE_DIURNAL.day_s == 86400.0
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        AZURE_DIURNAL.peak_rate = 1.0

@@ -1,0 +1,72 @@
+"""tools/lint_invariants.py: the repo itself must scan clean, and the
+two rules must actually bite on violating code (a lint that never fires
+is a green light taped over a hole)."""
+import importlib.util
+import os
+import pathlib
+
+ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+_spec = importlib.util.spec_from_file_location(
+    "lint_invariants", os.path.join(ROOT, "tools", "lint_invariants.py"))
+lint = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(lint)
+
+
+def test_repo_is_clean():
+    assert lint._scan(pathlib.Path(ROOT)) == []
+
+
+def _tree(tmp_path, rel, text):
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(text)
+    return tmp_path
+
+
+def test_kind_dispatch_outside_topospec_fires(tmp_path):
+    root = _tree(tmp_path, "src/repro/serving/rogue.py",
+                 'def f(kind):\n    if kind == "fleetopt":\n        pass\n')
+    (rel, line, msg), = lint._scan(root)
+    assert rel == "src/repro/serving/rogue.py" and line == 2
+    assert "from_kind" in msg
+
+
+def test_block_kind_literals_are_exempt(tmp_path):
+    """b.kind == "attn" (repro.models) and shape.kind == "train"
+    (repro.launch) are different enums — never flagged."""
+    root = _tree(tmp_path, "src/repro/models/blocks.py",
+                 'x = 1 if b.kind == "attn" else 2\n'
+                 'y = 1 if shape.kind == "train" else 2\n')
+    assert lint._scan(root) == []
+
+
+def test_kind_dispatch_inside_topospec_allowed(tmp_path):
+    root = _tree(tmp_path, "src/repro/core/topospec.py",
+                 'if kind == "fleetopt":\n    pass\n')
+    assert lint._scan(root) == []
+
+
+def test_mesh_api_outside_compat_fires(tmp_path):
+    root = _tree(tmp_path, "src/repro/launch/rogue.py",
+                 "from jax.sharding import Mesh, set_mesh\n")
+    (rel, _, msg), = lint._scan(root)
+    assert rel == "src/repro/launch/rogue.py"
+    assert "repro.models.compat" in msg
+    # attribute-style access fires too
+    root2 = _tree(tmp_path / "b", "src/x.py",
+                  "m = jax.sharding.get_abstract_mesh()\n")
+    assert len(lint._scan(root2)) == 1
+
+
+def test_stable_sharding_names_are_fine(tmp_path):
+    root = _tree(tmp_path, "src/repro/launch/ok.py",
+                 "from jax.sharding import NamedSharding, PartitionSpec\n")
+    assert lint._scan(root) == []
+
+
+def test_importing_shims_from_compat_is_sanctioned(tmp_path):
+    root = _tree(tmp_path, "src/repro/models/user.py",
+                 "from repro.models.compat import set_mesh\n"
+                 "from .compat import get_abstract_mesh\n")
+    assert lint._scan(root) == []

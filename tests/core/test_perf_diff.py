@@ -50,3 +50,96 @@ def test_wall_floor_is_tunable(tmp_path):
     cur = _dump(tmp_path, "cur.json", 0.9)
     rep = perf_diff.wall_budget_diff(base, cur, budget=1.5, floor_s=0.5)
     assert not rep["ok"]
+
+
+# --- cell keying --------------------------------------------------------
+
+def _rows_file(tmp_path, name, rows):
+    p = tmp_path / name
+    p.write_text(json.dumps({"meta": {}, "rows": rows}))
+    return str(p)
+
+
+def test_provisioning_splits_cells(tmp_path):
+    """Table F static vs autoscaled rows share every legacy key field
+    and must still land in distinct cells."""
+    rows = [dict(table="diurnal", generation="H100", workload="azure-conv",
+                 topology="fleetopt", provisioning=p, tok_per_watt=v)
+            for p, v in (("static", 4.1), ("autoscaled", 4.4))]
+    cells = perf_diff._fleet_cells(_rows_file(tmp_path, "f.json", rows))
+    assert len(cells) == 2
+    assert any("/static/" in k for k in cells)
+    assert any("/autoscaled/" in k for k in cells)
+
+
+def test_rows_without_provisioning_key_unchanged(tmp_path):
+    """Legacy rows get an empty provisioning segment on BOTH sides of a
+    diff, so committed steady-state baselines never move."""
+    rows = [dict(table="sim", generation="H100", workload="azure-conv",
+                 topology="fleetopt", simulated=5.0)]
+    path = _rows_file(tmp_path, "f.json", rows)
+    (key,) = perf_diff._fleet_cells(path)
+    assert key == "sim/H100/azure-conv/fleetopt///:simulated"
+    rep = perf_diff.fleet_diff(path, path, tolerance_pct=0.0)
+    assert rep["ok"] and len(rep["cells"]) == 1
+
+
+# --- job-summary markdown emitter ---------------------------------------
+
+def _fleet_rep(tmp_path, base_rows, cur_rows, tol=10.0):
+    return perf_diff.fleet_diff(
+        _rows_file(tmp_path, "base.json", base_rows),
+        _rows_file(tmp_path, "cur.json", cur_rows), tolerance_pct=tol)
+
+
+def _row(topo, v):
+    return dict(table="sim", generation="H100", workload="azure-conv",
+                topology=topo, tok_per_watt=v)
+
+
+def test_summary_markdown_worst_delta_first(tmp_path):
+    rep = _fleet_rep(tmp_path,
+                     [_row("homo", 2.0), _row("fleetopt", 5.0),
+                      _row("multipool", 4.0)],
+                     [_row("homo", 2.1), _row("fleetopt", 4.0),
+                      _row("multipool", 4.0)])
+    md = perf_diff.summary_markdown(rep)
+    assert md.startswith("## tok/W regression gate: ❌ FAIL")
+    body = [ln for ln in md.splitlines() if ln.startswith("| `")]
+    # worst (most negative) delta tops the table, flagged
+    assert "fleetopt" in body[0] and "-20.00%" in body[0] and "⚠️" in body[0]
+    assert "multipool" in body[1] and "+0.00%" in body[1]
+    assert "homo" in body[2]
+
+
+def test_summary_markdown_missing_cells_and_wall(tmp_path):
+    rep = _fleet_rep(tmp_path, [_row("homo", 2.0), _row("fleetopt", 5.0)],
+                     [_row("homo", 2.0)])
+    wall = dict(ok=False, budget=1.5, baseline_total_s=20.0,
+                current_total_s=40.0, ratio=2.0)
+    md = perf_diff.summary_markdown(rep, wall, title="fleet_sim gate")
+    assert "## fleet_sim gate: ❌ FAIL" in md
+    assert "Missing from current run" in md and "fleetopt" in md
+    assert "wall-clock budget" in md
+    assert "40.0s vs baseline 20.0s" in md and "2.00x" in md
+
+
+def test_summary_markdown_all_green(tmp_path):
+    rows = [_row("homo", 2.0)]
+    rep = _fleet_rep(tmp_path, rows, rows)
+    md = perf_diff.summary_markdown(rep)
+    assert "✅ ok" in md and "⚠️" not in md
+
+
+def test_emit_step_summary_appends_to_env_file(tmp_path, monkeypatch):
+    rows = [_row("homo", 2.0)]
+    rep = _fleet_rep(tmp_path, rows, rows)
+    out = tmp_path / "summary.md"
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(out))
+    perf_diff._emit_step_summary(rep, title="first")
+    perf_diff._emit_step_summary(rep, title="second")
+    text = out.read_text()
+    assert "## first: ✅ ok" in text and "## second: ✅ ok" in text
+    # and a runner without the env var is a silent no-op
+    monkeypatch.delenv("GITHUB_STEP_SUMMARY")
+    perf_diff._emit_step_summary(rep)

@@ -1,0 +1,198 @@
+"""Autoscaler mechanics + FleetSim integration.
+
+Two layers: the pure controller (`Autoscaler.plan_pool` turns arrival
+times into per-incarnation online windows — deterministic, unit-tested
+edge by edge) and the engine integration (online windows move engine
+clocks, weight loads charge idle joules, an autoscaled run still
+completes every request, and the autoscale=None path stays byte-for-
+byte the steady-state simulator the committed baselines pinned)."""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.autoscale import AutoscalePolicy
+from repro.core.modelspec import LLAMA31_70B
+from repro.core.profiles import H100_LLAMA70B
+from repro.core.topospec import TopologySpec
+from repro.core.workloads import AZURE, DiurnalProfile
+from repro.serving.autoscale import Autoscaler, InstanceSchedule
+from repro.serving.fleetsim import prepare_spec
+from repro.serving.request import sample_diurnal_trace
+from repro.serving.soa import BatchedPoolEngine
+
+POL = AutoscalePolicy(control_interval_s=10.0, target_utilization=0.8,
+                      scaleup_lag_s=2.0, scaledown_delay_s=30.0,
+                      min_frac=0.25, spare_instances=0)
+
+
+def _times(rate, t0, t1):
+    """Deterministic evenly spaced arrivals at `rate` over [t0, t1)."""
+    n = int(round(rate * (t1 - t0)))
+    return np.linspace(t0, t1, n, endpoint=False)
+
+
+# --- controller ---------------------------------------------------------
+
+def test_steady_low_rate_sheds_to_demand_after_hysteresis():
+    ts = _times(2.0, 0.0, 300.0)    # 2/s vs 10 instances x 1/s capacity
+    sched = Autoscaler(POL).plan_pool(ts, n_peak=10, rate_per_instance=1.0,
+                                      horizon_s=300.0)
+    assert sched.n_rows == 10                       # no scale-ups needed
+    assert int(sched.online_at(np.array([0.0]))[0]) == 10
+    # demand needs ceil(2/0.8)=3 > floor ceil(.25*10)=3; after the 30 s
+    # hysteresis the pool sheds to exactly that
+    assert int(sched.online_at(np.array([299.0]))[0]) == 3
+    # LIFO: the shed rows are the last ones, the survivors stay open
+    assert np.isinf(sched.online_until[:3]).all()
+
+
+def test_step_up_scales_back_out_with_lag_and_load():
+    ts = np.concatenate([_times(2.0, 0.0, 200.0),
+                         _times(9.0, 200.0, 400.0)])
+    sched = Autoscaler(POL).plan_pool(ts, n_peak=10, rate_per_instance=1.0,
+                                      horizon_s=400.0, load_s=5.0)
+    # shed overnight, then the step at t=200 forces re-adds
+    assert sched.n_rows > 10
+    new = sched.online_from[10:]
+    # each scale-up decision lands at an epoch boundary after the step,
+    # and comes online lag + load later
+    np.testing.assert_allclose(
+        (new - POL.scaleup_lag_s - 5.0) % POL.control_interval_s, 0.0,
+        atol=1e-9)
+    assert (new > 200.0).all()
+    # the pool is back at full strength by the end (9/0.8 > 10 -> clip)
+    assert int(sched.online_at(np.array([399.0]))[0]) == 10
+
+
+def test_trend_extrapolation_scales_ahead_of_a_ramp():
+    """On a steep ramp the trend-aware controller must hold more
+    capacity than the naive rate/cap target at the same instant."""
+    ramp = np.sqrt(np.linspace(0.0, 1.0, 4000)) * 400.0   # accelerating
+    sched = Autoscaler(POL).plan_pool(np.sort(ramp), n_peak=20,
+                                      rate_per_instance=1.0,
+                                      horizon_s=400.0)
+    t = 200.0
+    rate_now = ((ramp >= t - 10.0) & (ramp < t)).sum() / 10.0
+    naive = math.ceil(rate_now / 0.8)
+    assert int(sched.online_at(np.array([t]))[0]) >= naive
+
+
+def test_cancelled_incarnation_has_zero_length_window():
+    """A spike shorter than its own actuation lag: the scale-up is
+    reverted before coming online and must never charge."""
+    pol = dataclasses.replace(POL, scaleup_lag_s=100.0,
+                              scaledown_delay_s=0.0)
+    ts = np.concatenate([_times(2.0, 0.0, 100.0),
+                         _times(9.0, 100.0, 110.0),
+                         _times(2.0, 110.0, 300.0)])
+    sched = Autoscaler(pol).plan_pool(ts, n_peak=10, rate_per_instance=1.0,
+                                      horizon_s=300.0)
+    cancelled = sched.online_until <= sched.online_from
+    assert cancelled[10:].any()
+    assert sched.online_instance_seconds(0.0, 300.0) \
+        < 10 * 300.0  # sheds really saved instance-seconds
+
+
+def test_online_instance_seconds_matches_online_at_integral():
+    ts = _times(3.0, 0.0, 200.0)
+    sched = Autoscaler(POL).plan_pool(ts, n_peak=6, rate_per_instance=1.0,
+                                      horizon_s=200.0)
+    grid = np.linspace(0.0, 200.0, 20001)
+    counts = sched.online_at(grid)
+    numeric = float(np.sum((counts[:-1] + counts[1:]) / 2.0)
+                    * (grid[1] - grid[0]))
+    assert sched.online_instance_seconds(0.0, 200.0) \
+        == pytest.approx(numeric, rel=2e-3)
+
+
+# --- engine integration -------------------------------------------------
+
+def _quick_spec(pol=None):
+    spec = TopologySpec.from_kind("fleetopt", H100_LLAMA70B, LLAMA31_70B,
+                                  b_short=4096)
+    return spec if pol is None else dataclasses.replace(spec, autoscale=pol)
+
+
+def _diurnal_inputs(peak=40.0, day=120.0):
+    dprof = DiurnalProfile(peak_rate=peak, day_s=day)
+    wl = dataclasses.replace(AZURE, arrival_rate=peak)
+    trace = sample_diurnal_trace(wl, dprof, day, seed=0,
+                                 max_total=_quick_spec().max_window)
+    return wl, trace
+
+
+def test_set_online_windows_moves_clocks_and_charges_load():
+    eng = BatchedPoolEngine(window=4096, profile=H100_LLAMA70B,
+                            instances=3, n_slots=8,
+                            streamed_params=LLAMA31_70B.streamed_params)
+    eng.bank.measure_t0, eng.bank.measure_t1 = 0.0, 100.0
+    j0 = eng.bank.m_joules.sum()
+    eng.set_online_windows(np.array([0.0, 10.0, 20.0]),
+                           np.array([np.inf, np.inf, 15.0]), load_s=4.0)
+    np.testing.assert_allclose(eng.bank.sim_time_s, [0.0, 10.0, 20.0])
+    # row 1 (a live scale-up) paid 4 s of idle weight-load draw; row 2
+    # was cancelled before opening (until < from) and pays nothing
+    assert eng.bank.m_idle_joules[1] > 0.0
+    assert eng.bank.m_idle_joules[2] == 0.0
+    assert eng.bank.m_joules.sum() > j0
+
+
+def test_autoscaled_run_completes_everything_and_saves_energy():
+    # peak high enough that each pool gets several instances (a
+    # single-instance pool can never shed below its floor of one)
+    wl, trace = _diurnal_inputs(peak=200.0, day=120.0)
+    # spare_instances=0: at this toy scale (a handful of instances per
+    # pool) the default N+1 spare would hold the whole peak fleet online
+    # through the trough and there would be nothing to measure
+    pol = AutoscalePolicy(control_interval_s=6.0, target_utilization=0.7,
+                          scaleup_lag_s=1.0, scaledown_delay_s=12.0,
+                          min_frac=0.2, spare_instances=0)
+    spec = _quick_spec(pol)
+    sim_s, reqs_s, _ = prepare_spec(spec, wl, seed=0, trace=trace)
+    rep_s = sim_s.run(reqs_s, warmup_frac=0.0)
+    sim_a, reqs_a, _ = prepare_spec(spec, wl, seed=0, trace=trace,
+                                    autoscale=True)
+    rep_a = sim_a.run(reqs_a, warmup_frac=0.0)
+    assert rep_a["fleet"]["completed"] == rep_s["fleet"]["completed"]
+    assert rep_a["fleet"]["completed"] == len(trace)
+    # the whole point: fewer instance-seconds powered, more tok/W
+    assert sim_a.schedules and not sim_s.schedules
+    assert rep_a["fleet"]["joules"] < rep_s["fleet"]["joules"]
+    assert rep_a["fleet"]["tok_per_watt"] > rep_s["fleet"]["tok_per_watt"]
+    # per-pool stats surface the measured average online fleet
+    for role in sim_a.order:
+        assert "avg_online_instances" in rep_a[role]
+        assert "avg_online_instances" not in rep_s[role]
+
+
+def test_autoscaled_run_is_deterministic():
+    wl, trace = _diurnal_inputs(peak=25.0, day=80.0)
+    pol = AutoscalePolicy(control_interval_s=5.0, scaleup_lag_s=1.0,
+                          scaledown_delay_s=10.0)
+    spec = _quick_spec(pol)
+
+    def run():
+        sim, reqs, _ = prepare_spec(spec, wl, seed=0, trace=trace,
+                                    autoscale=True)
+        f = sim.run(reqs, warmup_frac=0.0)["fleet"]
+        return f["tok_per_watt"], f["joules"], f["completed"]
+
+    assert run() == run()
+
+
+def test_prepare_spec_defaults_to_spec_policy():
+    """autoscale=True with no explicit policy uses the spec's knob."""
+    wl, trace = _diurnal_inputs(peak=25.0, day=80.0)
+    pol = AutoscalePolicy(control_interval_s=5.0, min_frac=0.5)
+    sim, _, _ = prepare_spec(_quick_spec(pol), wl, seed=0, trace=trace,
+                             autoscale=True)
+    assert sim.autoscale is pol
+
+
+def test_autoscale_requires_numpy_engine():
+    wl, trace = _diurnal_inputs(peak=25.0, day=80.0)
+    with pytest.raises(ValueError, match="numpy"):
+        prepare_spec(_quick_spec(AutoscalePolicy()), wl, seed=0,
+                     trace=trace, autoscale=True, engine="jax")
