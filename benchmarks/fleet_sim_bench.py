@@ -332,6 +332,14 @@ def main(argv=None) -> None:
                          "the compiled serving.jax_engine drains — same "
                          "cells, same tolerances (CI diffs jax against "
                          "the committed numpy baseline)")
+    ap.add_argument("--trace", metavar="PATH", nargs="?", default=None,
+                    const="-",
+                    help="record a FleetScope lifecycle trace of every "
+                         "sim in the run (FleetSim.default_telemetry); "
+                         "optional PATH dumps it as Perfetto-viewable "
+                         "Chrome trace-event JSON.  Rows are unchanged "
+                         "— the CI wall-budget gate runs with this on "
+                         "to price the tracing overhead")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="dump {'meta', 'rows'} JSON (the CI perf-"
                          "regression baseline/current format)")
@@ -343,9 +351,23 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     n = 1000 if args.quick else args.n_requests
     n_slo = 1500 if args.quick else args.slo_requests
+    recorder = None
+    if args.trace:
+        from repro.serving import TraceRecorder, to_perfetto
+        recorder = TraceRecorder(level="lifecycle")
+        FleetSim.default_telemetry = recorder
     rows, derived, timings = run(n_requests=n, slo_requests=n_slo,
                                  seed=args.seed, quick=args.quick,
                                  engine=args.engine)
+    if recorder is not None:
+        FleetSim.default_telemetry = None
+        counts = {k: v for k, v in recorder.counts().items() if v}
+        print(f"=== trace: {len(recorder.events)} events over "
+              f"{len(recorder.pool_names)} pools {counts} ===")
+        if args.trace != "-":
+            with open(args.trace, "w") as fh:
+                json.dump(to_perfetto(recorder), fh)
+            print(f"perfetto trace -> {args.trace}")
     if args.json:
         with open(args.json, "w") as fh:
             json.dump({"meta": dict(n_requests=n, slo_requests=n_slo,

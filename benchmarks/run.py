@@ -16,11 +16,11 @@ RESULTS = pathlib.Path(__file__).resolve().parent / "results"
 def _suites():
     from . import (beyond_paper, engine_bench, extra_sweeps,
                    fleet_diurnal_bench, fleet_grid_bench, fleet_sim_bench,
-                   kernel_bench, roofline_report, table1_context_law,
-                   table2_model_archs, table3_fleet_topology,
-                   table4_semantic_routing, table5_gpu_generations,
-                   table6_archetypes, table7_power_params,
-                   topology_search_bench)
+                   fleet_trace_report, kernel_bench, roofline_report,
+                   table1_context_law, table2_model_archs,
+                   table3_fleet_topology, table4_semantic_routing,
+                   table5_gpu_generations, table6_archetypes,
+                   table7_power_params, topology_search_bench)
     return {
         # harness_run also records the full-run wall-clock trajectory to
         # results/BENCH_fleet_sim_full.json (the committed quick-config
@@ -38,6 +38,10 @@ def _suites():
         # --quick baseline results/fleet_diurnal.json follows the same
         # deliberate-refresh rule
         "fleet_diurnal": fleet_diurnal_bench.harness_run,
+        # FleetScope: Table F cells re-run with detail tracing on —
+        # phase-decomposed energy (reconciled <0.1% against the meters),
+        # autoscaler ramp lag and peak-window zoom read off the timeline
+        "fleet_trace_report": fleet_trace_report.harness_run,
         "table1_context_law": table1_context_law.run,
         "table2_model_archs": table2_model_archs.run,
         "table3_fleet_topology": table3_fleet_topology.run,

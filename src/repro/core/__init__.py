@@ -15,21 +15,26 @@ Public API surface (see DESIGN.md §2):
   topospec   — declarative topology IR (TopologySpec / PoolSpec)
   topo_search — tok/W-maximizing topology search over the IR
   slo        — SLO-constrained sizing loop (measured TTFT p99 authority)
+  timeline   — FleetScope time-series grid + Chrome trace-event builders
   law        — 1/W-law fits + gain decomposition
   moe        — active-parameter streaming + dispatch sensitivity
   analyzer   — fleet_tpw_analysis (Appendix B API)
 """
 from . import (adaptive, analyzer, autoscale, carbon, disagg, fleet,
                hardware, kvcache, law, modelspec, moe, multipool, power,
-               profiles, roofline, routing, slo, speculative, tokenomics,
-               topo_search, topospec, workloads)
+               profiles, roofline, routing, slo, speculative, timeline,
+               tokenomics, topo_search, topospec, workloads)
 from .adaptive import AdaptiveController
 from .autoscale import AutoscalePolicy
 from .carbon import GRIDS, EnergyBill, GridProfile, bill
 from .disagg import Disaggregated
 from .fleet import PoolOverride
 from .multipool import MultiPool, ladder_windows, sweep_pool_counts
-from .slo import SLOSizingResult, SLOSpec, size_to_slo, size_to_slo_spec
+from .slo import (SLOSizingResult, SLOSpec, explain as explain_slo,
+                  size_to_slo, size_to_slo_spec)
+from .timeline import (EVENT_NAMES, LIFECYCLE_KINDS, PHASES,
+                       TIMELINE_SCHEMA_VERSION, TRACE_SCHEMA_VERSION,
+                       MetricsTimeline, bin_intervals, chrome_trace_doc)
 from .topo_search import TopologySearchResult, ladder_spec, optimize_topology
 from .topospec import SEMANTIC_KINDS, PoolSpec, TopologySpec, plan_roles
 from .speculative import speculative_tok_per_watt

@@ -47,6 +47,8 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Sequence
 
+import numpy as np
+
 from .fleet import PREFILL_MFU, FleetReport, PoolOverride
 from .modelspec import ModelSpec
 from .profiles import BaseProfile
@@ -136,6 +138,11 @@ class SLOSizingResult:
     # measured HOL calibration: per-role occupancy-inflation factor the
     # loop fed back into the closed-form sizing (PoolOverride.hol_inflation)
     measured_hol: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # per-role violation forensics from the final measured fleet
+    # (`explain()` rows: which pool busted the SLO, when, how badly) —
+    # FleetScope's attribution view of the same per-request columns the
+    # sizing loop reduces over
+    explanation: List[dict] = dataclasses.field(default_factory=list)
 
     @property
     def ttft_p99_s(self) -> float:
@@ -191,6 +198,67 @@ class SLOSizingResult:
                     trimmed=self.instances_trimmed,
                     rounds=len(self.rounds),
                     compliant=self.compliant)
+
+
+def explain(sim, slo: SLOSpec, *, n_bins: int = 12) -> List[dict]:
+    """Per-role SLO violation forensics over a drained `FleetSim`.
+
+    Mirrors the sizing loop's attribution (a TTFT violation belongs to
+    the pool that drained the request's prefill — `ttft_role` on the
+    cached summaries) but answers the *observability* question the loop
+    never had to: which pool violated, **when**, and how badly.  Returns
+    one row per role, worst offender first:
+
+      role, n_obs, n_late, late_frac  — attribution counts
+      worst_ttft_s                    — the single worst TTFT (NaN if the
+                                        role observed nothing)
+      first_violation_s,
+      last_violation_s                — arrival-time span of the late
+                                        requests (NaN when none)
+      peak_window_s, peak_window_late — the [lo, hi) arrival-time bin (of
+                                        `n_bins` over the run) holding
+                                        the most violations, and its
+                                        count — "the 14:00 peak did it"
+    """
+    n_roles = len(sim.order)
+    arrivals = [[] for _ in range(n_roles)]
+    ttfts = [[] for _ in range(n_roles)]
+    for role in sim.order:
+        s = sim.summaries[role]
+        for k in range(n_roles):
+            m = s.ttft_role == k
+            if m.any():
+                arrivals[k].append(s.arrival[m])
+                ttfts[k].append((s.first_token - s.arrival)[m])
+    t_hi = max((float(a.max()) for lst in arrivals for a in lst),
+               default=1.0)
+    edges = np.linspace(0.0, max(t_hi, 1e-9), n_bins + 1)
+    out = []
+    for k, role in enumerate(sim.order):
+        a = np.concatenate(arrivals[k]) if arrivals[k] else np.empty(0)
+        t = np.concatenate(ttfts[k]) if ttfts[k] else np.empty(0)
+        late = t > slo.ttft_p99_s
+        n_obs, n_late = len(t), int(late.sum())
+        row = dict(role=role, n_obs=n_obs, n_late=n_late,
+                   late_frac=round(n_late / n_obs, 4) if n_obs else 0.0,
+                   worst_ttft_s=round(float(t.max()), 4) if n_obs
+                   else float("nan"),
+                   first_violation_s=float("nan"),
+                   last_violation_s=float("nan"),
+                   peak_window_s=(float("nan"), float("nan")),
+                   peak_window_late=0)
+        if n_late:
+            la = a[late]
+            row["first_violation_s"] = round(float(la.min()), 3)
+            row["last_violation_s"] = round(float(la.max()), 3)
+            hist, _ = np.histogram(la, bins=edges)
+            b = int(np.argmax(hist))
+            row["peak_window_s"] = (round(float(edges[b]), 3),
+                                    round(float(edges[b + 1]), 3))
+            row["peak_window_late"] = int(hist[b])
+        out.append(row)
+    out.sort(key=lambda r: (-r["n_late"], r["role"]))
+    return out
 
 
 class _FleetMeasurer:
@@ -332,8 +400,6 @@ def size_to_slo_spec(spec: TopologySpec, workload: Workload, *,
     trials never enter `rounds` (which stays the monotone grow-only audit
     trail).
     """
-    import numpy as np
-
     measurer = _FleetMeasurer(
         spec, workload, n_requests=n_requests, seed=seed,
         prefill_chunk=prefill_chunk, engine=engine, trace=trace)
@@ -525,7 +591,8 @@ def size_to_slo_spec(spec: TopologySpec, workload: Workload, *,
         plan=plan, unconstrained=unconstrained, report=report,
         overrides=overrides, rounds=rounds, compliant=compliant,
         trimmed=trimmed, trim_rounds=trim_rounds,
-        sim_stats=dict(measurer.stats), measured_hol=measured_hol)
+        sim_stats=dict(measurer.stats), measured_hol=measured_hol,
+        explanation=explain(sim, slo) if sim is not None else [])
 
 
 def size_to_slo(kind: str, workload: Workload, profile: BaseProfile,

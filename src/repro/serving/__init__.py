@@ -1,5 +1,5 @@
 from .autoscale import Autoscaler, AutoscalePolicy, InstanceSchedule
-from .energy import EnergyMeter, MeterBank
+from .energy import EnergyMeter, MeterBank, conservation_violations
 from .engine import (DrainTruncatedError, PoolEngine, resolve_prefill_chunk,
                      scaled_prefill_chunk)
 from .fleetsim import (FleetSim, PoolGroup, PoolSummary, SimVsAnalytical,
@@ -10,8 +10,12 @@ from .models import ModelBinding, ModelProfileRegistry
 from .request import Request, sample_diurnal_trace, synthetic_requests
 from .router import SEMANTIC_KINDS, ContextRouter, RouterPolicy
 from .soa import BatchedPoolEngine
+from .telemetry import (TraceRecorder, build_timeline, phase_totals,
+                        reconcile_energy, to_perfetto)
 
 __all__ = ["EnergyMeter", "MeterBank", "PoolEngine", "BatchedPoolEngine",
+           "TraceRecorder", "build_timeline", "phase_totals",
+           "reconcile_energy", "to_perfetto", "conservation_violations",
            "Request", "synthetic_requests", "sample_diurnal_trace",
            "Autoscaler", "AutoscalePolicy", "InstanceSchedule",
            "ContextRouter", "RouterPolicy", "FleetSim", "PoolGroup",

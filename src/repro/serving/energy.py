@@ -59,6 +59,15 @@ class EnergyMeter:
     # whether the latest decode charge landed inside the window (engines
     # use this to attribute in-window tokens to slots for eviction backout)
     last_charge_in_window: bool = True
+    # FleetScope charge-channel sink (serving.telemetry.TraceRecorder),
+    # attached by the owning engine's attach_trace — never at
+    # construction, so telemetry-off runs skip one None check per charge
+    trace: object = dataclasses.field(default=None, repr=False,
+                                      compare=False)
+    trace_pool: int = dataclasses.field(default=0, repr=False,
+                                        compare=False)
+    trace_instance: int = dataclasses.field(default=0, repr=False,
+                                            compare=False)
 
     def _in_window(self, dt_s: float) -> bool:
         mid = self.sim_time_s + 0.5 * dt_s
@@ -78,6 +87,11 @@ class EnergyMeter:
         self.joules += power * tau_s
         self.dispatch_joules += dispatch_j
         self.tokens += n_active
+        if self.trace is not None:
+            self.trace.charge(self.trace_pool, "decode",
+                              self.trace_instance, self.sim_time_s,
+                              tau_s, power * tau_s, tokens=n_active,
+                              dispatch=dispatch_j)
         self.sim_time_s += tau_s
         return tau_s
 
@@ -112,6 +126,10 @@ class EnergyMeter:
         self.joules += e
         self.prefill_joules += e
         self.prefill_tokens += n_tokens
+        if self.trace is not None:
+            self.trace.charge(self.trace_pool, "prefill",
+                              self.trace_instance, start, t, e,
+                              tokens=n_tokens)
         self.sim_time_s += dt
         return dt
 
@@ -141,6 +159,9 @@ class EnergyMeter:
         self.joules += e
         self.handoff_joules += e
         self.handoff_bytes += n_bytes
+        if self.trace is not None:
+            self.trace.charge(self.trace_pool, "handoff",
+                              self.trace_instance, start_s, duration_s, e)
         return e
 
     def charge_idle(self, dt_s: float) -> None:
@@ -155,6 +176,10 @@ class EnergyMeter:
             self.m_idle_joules += e_in
         self.joules += e
         self.idle_joules += e
+        if self.trace is not None:
+            self.trace.charge(self.trace_pool, "idle",
+                              self.trace_instance, self.sim_time_s,
+                              dt_s, e)
         self.sim_time_s += dt_s
 
     @property
@@ -207,6 +232,11 @@ class MeterBank:
         self.m_idle_joules = f()
         self.m_handoff_joules = f()
         self.last_charge_in_window = np.ones(n, bool)
+        # FleetScope charge sink (see EnergyMeter.trace) — attach_trace
+        # only wires it at level="detail", keeping lifecycle tracing off
+        # the vectorized charge path entirely
+        self.trace = None
+        self.trace_pool = 0
 
     # --- vectorized twins of the EnergyMeter charges --------------------
 
@@ -232,6 +262,10 @@ class MeterBank:
         self.joules[rows] += e
         self.dispatch_joules[rows] += dispatch_j
         self.tokens[rows] += n_active
+        if self.trace is not None:
+            self.trace.charge(self.trace_pool, "decode", rows,
+                              self.sim_time_s[rows], tau_s, e,
+                              tokens=n_active, dispatch=dispatch_j)
         self.sim_time_s[rows] += tau_s
         return tau_s
 
@@ -256,6 +290,9 @@ class MeterBank:
         self.joules[rows] += e
         self.prefill_joules[rows] += e
         self.prefill_tokens[rows] += n_tokens
+        if self.trace is not None:
+            self.trace.charge(self.trace_pool, "prefill", rows, start, t,
+                              e, tokens=n_tokens)
         self.sim_time_s[rows] += dt
         return dt
 
@@ -270,6 +307,8 @@ class MeterBank:
         self.m_idle_joules[rows] += e_in
         self.joules[rows] += e
         self.idle_joules[rows] += e
+        if self.trace is not None:
+            self.trace.charge(self.trace_pool, "idle", rows, t, dt_s, e)
         self.sim_time_s[rows] += dt_s
 
     # --- scalar slow paths ----------------------------------------------
@@ -304,4 +343,64 @@ class MeterBank:
         self.joules[i] += e
         self.handoff_joules[i] += e
         self.handoff_bytes[i] += n_bytes
+        if self.trace is not None:
+            self.trace.charge(self.trace_pool, "handoff", i, start_s,
+                              duration_s, e)
         return e
+
+
+# --- conservation invariants --------------------------------------------
+
+def conservation_violations(meter, *, rtol: float = 1e-9,
+                            atol: float = 1e-6) -> list:
+    """Invariant audit for an `EnergyMeter` or `MeterBank` (per row).
+
+    Checks the accounting identities the rest of the stack leans on:
+    every windowed `m_*` counter is bounded by its lifetime total, no
+    counter has gone negative, the derived decode residual
+    (joules - prefill - idle - handoff) is non-negative, and the MoE
+    dispatch share fits inside it (dispatch rides *inside* decode
+    charges, never additive).  Returns human-readable violation strings;
+    empty list == conserved.  Tolerance is `atol + rtol * |joules|` per
+    row — charges are exact float64 sums, so violations beyond rounding
+    mean a charge path double-counted or backed out too much.
+    """
+    out = []
+
+    def arr(name):
+        return np.atleast_1d(np.asarray(getattr(meter, name), np.float64))
+
+    joules = arr("joules")
+    prefill = arr("prefill_joules")
+    idle = arr("idle_joules")
+    handoff = arr("handoff_joules")
+    tol = atol + rtol * np.abs(joules)
+
+    def chk(ok, msg):
+        bad = np.flatnonzero(~ok)
+        if len(bad):
+            out.append(f"{msg} (rows {bad.tolist()})")
+
+    decode = joules - prefill - idle - handoff
+    chk(decode >= -tol,
+        "decode residual negative: prefill+idle+handoff > joules")
+    chk(arr("dispatch_joules") <= decode + tol,
+        "dispatch_joules exceeds the decode share it must ride inside")
+    m_sum = (arr("m_prefill_joules") + arr("m_idle_joules")
+             + arr("m_handoff_joules"))
+    chk(m_sum <= arr("m_joules") + tol,
+        "windowed phase joules exceed windowed total")
+    for m, t in (("m_joules", "joules"),
+                 ("m_prefill_joules", "prefill_joules"),
+                 ("m_idle_joules", "idle_joules"),
+                 ("m_handoff_joules", "handoff_joules"),
+                 ("m_dispatch_joules", "dispatch_joules"),
+                 ("m_handoff_bytes", "handoff_bytes")):
+        chk(arr(m) <= arr(t) + tol, f"{m} > {t}")
+        chk(arr(m) >= -tol, f"{m} negative")
+    m_tok = np.atleast_1d(np.asarray(meter.m_tokens))
+    tok = np.atleast_1d(np.asarray(meter.tokens))
+    chk(m_tok <= tok, "m_tokens > tokens")
+    chk(m_tok >= 0, "m_tokens negative")
+    chk(tok >= 0, "tokens negative")
+    return out

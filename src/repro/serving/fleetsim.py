@@ -61,6 +61,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.autoscale import AutoscalePolicy
+from repro.core.timeline import EV_ARRIVE, EV_ROUTE
 from repro.core.disagg import HANDOFF_J_PER_BYTE, INTERCONNECT_BPS
 from repro.core.fleet import FleetReport, PoolOverride
 from repro.core.modelspec import ModelSpec
@@ -386,10 +387,16 @@ class FleetSim:
                  kv_interconnect_Bps: float = INTERCONNECT_BPS,
                  kv_handoff_j_per_byte: float = HANDOFF_J_PER_BYTE,
                  engine: str = "numpy",
-                 autoscale: Optional[AutoscalePolicy] = None):
+                 autoscale: Optional[AutoscalePolicy] = None,
+                 telemetry=None):
         self.policy = policy
         self.plan = plan
         self.autoscale = autoscale
+        # FleetScope: explicit kwarg wins; the class attribute is the
+        # bench's opt-in hook (`fleet_sim_bench --trace` sets it once and
+        # every sim the harness builds records into the shared recorder)
+        self.telemetry = telemetry if telemetry is not None \
+            else FleetSim.default_telemetry
         if autoscale is not None and engine != "numpy":
             # the jitted drain (serving.jax_engine) initialises every
             # row's clock to zero inside the compiled while_loop, so
@@ -469,6 +476,8 @@ class FleetSim:
             # per planned incarnation (serving.autoscale)
             self._engine_kwargs[role] = kwargs
             self.groups[role] = PoolGroup(role, engine_cls(**kwargs))
+            if self.telemetry is not None:
+                self.groups[role].engine.attach_trace(self.telemetry)
         # cross-pool edges, read straight off the spec's pools (all point
         # forward in `order` — validated at spec construction):
         #   handoff_to  — prefill role -> its slice's decode role
@@ -509,6 +518,11 @@ class FleetSim:
     # (per-run horizon = the last arrival).  Instrumentation for the
     # bench's sim-seconds-per-wall-second throughput metric.
     sim_seconds_total: float = 0.0
+
+    # process-wide FleetScope recorder picked up by sims built without an
+    # explicit `telemetry=` kwarg (how the bench harness opts whole runs
+    # into tracing without threading a kwarg through every call site)
+    default_telemetry = None
 
     def run(self, requests: List[Request], *, warmup_frac: float = 0.35,
             max_iters: int = 20_000_000,
@@ -555,6 +569,18 @@ class FleetSim:
             self.router.route(r)
         if self.autoscale is not None:
             self._apply_autoscale()
+        tr = self.telemetry
+        if tr is not None:
+            # emitted after routing *and* autoscale so `r.pool` reflects
+            # the final replica assignment (the autoscale rebuild
+            # re-submits the routed queues onto the scheduled rows)
+            fleet_pid = tr.pool_id("fleet")
+            for r in reqs:
+                tr.event(EV_ARRIVE, r.rid, fleet_pid, -1, r.arrival_time)
+                name, _, inst = (r.pool or "").partition("#")
+                tr.event(EV_ROUTE, r.rid,
+                         tr.pool_id(name) if name else fleet_pid,
+                         int(inst) if inst else -1, r.arrival_time)
         self.summaries = {}
         self.fresh_roles = []
         # topological order: cross-pool flow (overflow migrations and KV
@@ -593,6 +619,8 @@ class FleetSim:
             kwargs = dict(self._engine_kwargs[role],
                           instances=sched.n_rows)
             new_eng = BatchedPoolEngine(**kwargs)
+            if self.telemetry is not None:
+                new_eng.attach_trace(self.telemetry)
             new_eng.bank.measure_t0, new_eng.bank.measure_t1 = self._window
             new_eng.set_online_windows(sched.online_from,
                                        sched.online_until,
@@ -613,8 +641,15 @@ class FleetSim:
         grp = self.groups[role]
         inbox = rs["inbox"]
         if inbox[role]:
+            tr = self.telemetry
             for r in sorted(inbox[role], key=lambda r: r.ready_time):
                 grp.submit(r)
+                if tr is not None:
+                    # re-entry hop (overflow / escalation / KV handoff):
+                    # a second ROUTE at the destination replica
+                    name, _, inst = r.pool.partition("#")
+                    tr.event(EV_ROUTE, r.rid, tr.pool_id(name),
+                             int(inst) if inst else -1, r.ready_time)
             inbox[role] = []
         grp.engine.sort_queues()    # keep queues time-sorted for the
         return grp.engine           # head-gated admission
@@ -830,7 +865,8 @@ def prepare_spec(spec: TopologySpec, workload: Workload, *,
                  pool_overrides: Optional[Dict[str, PoolOverride]] = None,
                  engine: str = "numpy",
                  trace: Optional[List[Tuple[int, int, float]]] = None,
-                 autoscale: bool = False):
+                 autoscale: bool = False,
+                 telemetry=None):
     """Provision a `TopologySpec` analytically and synthesise its trace;
     returns `(sim, reqs, plan)` ready for `sim.run(reqs)` — the common
     front half of `simulate_spec`, split out so the grid driver (and the
@@ -856,7 +892,8 @@ def prepare_spec(spec: TopologySpec, workload: Workload, *,
             else AutoscalePolicy()
     sim = FleetSim(policy, plan, registry=registry,
                    prefill_chunk=prefill_chunk, rng_seed=seed,
-                   engine=engine, autoscale=as_policy)
+                   engine=engine, autoscale=as_policy,
+                   telemetry=telemetry)
     sim.workload_name = workload.name     # grid-driver report labels
     sim.topology_kind = spec.kind
     reqs = trace_requests(workload, n_requests, seed=seed,

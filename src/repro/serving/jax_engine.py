@@ -48,6 +48,9 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.timeline import (EV_COMPLETE, EV_ESCALATE, EV_FIRST_TOKEN,
+                                 EV_HANDOFF, EV_OVERFLOW)
+
 from .engine import _LCG_A, _LCG_C, _NEVER, DrainTruncatedError
 from .soa import BatchedPoolEngine
 
@@ -673,6 +676,7 @@ class JaxPoolEngine(BatchedPoolEngine):
         self._refresh_heads(np.arange(self.instances))
         kinds, times = res["out_kind"], res["out_time"]
         firsts, ngens = res["out_first"], res["out_ngen"]
+        tr = self.trace
         for i in range(self.instances):
             n = int(self.qlen[i])
             if not n:
@@ -694,11 +698,17 @@ class JaxPoolEngine(BatchedPoolEngine):
                     # first token emitted at that instant
                     req.first_token_time = float(firsts[i, j])
                     req.n_generated = 1
+                    if tr is not None:
+                        tr.event(EV_FIRST_TOKEN, req.rid, self._trace_pool,
+                                 i, req.first_token_time)
                 if kind == _EV_DONE:
                     req.n_generated = int(ngens[i, j])
                     req.generated = None
                     req.finish_time = t
                     self.completed[i].append(req)
+                    if tr is not None:
+                        tr.event(EV_COMPLETE, req.rid, self._trace_pool,
+                                 i, t)
                 elif kind == _EV_HANDOFF:
                     req.n_generated = 1
                     req.generated = [int(
@@ -708,6 +718,8 @@ class JaxPoolEngine(BatchedPoolEngine):
                     req.ready_time = t
                     self.handoff[i].append(req)
                     self.relayed[i].append(req)
+                    if tr is not None:
+                        tr.event(EV_HANDOFF, req.rid, self._trace_pool, i, t)
                 else:                       # overflow / escalation eviction
                     req.generated = None
                     req.prefill_done = False
@@ -717,5 +729,11 @@ class JaxPoolEngine(BatchedPoolEngine):
                     if kind == _EV_ESCALATE:
                         req.escalations += 1
                         self.escalated[i].append(req)
+                        if tr is not None:
+                            tr.event(EV_ESCALATE, req.rid, self._trace_pool,
+                                     i, t)
                     else:
                         self.overflowed[i].append(req)
+                        if tr is not None:
+                            tr.event(EV_OVERFLOW, req.rid, self._trace_pool,
+                                     i, t)

@@ -129,13 +129,24 @@ def latency_percentiles(reqs: Sequence[Request]) -> Dict[str, float]:
 
 def latency_percentiles_arrays(arrival: np.ndarray, first_token: np.ndarray,
                                finish: np.ndarray, n_generated: np.ndarray,
+                               *, strict_keys: bool = False,
                                ) -> Dict[str, float]:
     """Column-oriented twin of `latency_percentiles` — the fleet
     simulator's cached pool summaries carry per-request metric columns,
     so the roll-up never rebuilds Request lists.  Shared metric
     definitions live here, once: TTFT needs a first token, e2e a finish,
-    TPOT both plus >1 generated token."""
+    TPOT both plus >1 generated token.
+
+    The legacy default *drops* the keys of empty populations (an empty
+    measurement window returns {}), which forces every consumer into
+    `.get(..., default)` guesswork.  `strict_keys=True` always returns
+    all five keys, with NaN marking "no observations" — the trace
+    report renders those as "no data" instead of a silent 0.0."""
     out: Dict[str, float] = {}
+    if strict_keys:
+        out = {k: float("nan") for k in ("ttft_p50_s", "ttft_p99_s",
+                                         "e2e_p99_s", "tpot_p50_ms",
+                                         "tpot_p99_ms")}
     if not len(arrival):
         return out
     ttft = (first_token - arrival)[first_token >= 0]

@@ -44,6 +44,9 @@ import numpy as np
 
 from repro.core.fleet import PREFILL_MFU
 from repro.core.profiles import BaseProfile
+from repro.core.timeline import (EV_ADMIT, EV_COMPLETE, EV_ESCALATE,
+                                 EV_FIRST_TOKEN, EV_HANDOFF, EV_OVERFLOW,
+                                 EV_PREFILL)
 
 from .energy import MeterBank
 from .engine import (_LCG_A, _LCG_C, _NEVER, DrainTruncatedError,
@@ -130,6 +133,24 @@ class BatchedPoolEngine:
         self.min_ready = np.full(I, np.inf)
         self._ready_arr: List[np.ndarray] = [np.empty(0)] * I
         self._sufmin: List[np.ndarray] = [np.empty(0)] * I
+        # FleetScope sink (serving.telemetry.TraceRecorder): None =
+        # telemetry off; every hook is an `is not None` guard around
+        # pure reads, so disabled runs are bit-identical
+        self.trace = None
+        self._trace_pool = 0
+
+    def attach_trace(self, recorder, *,
+                     name: Optional[str] = None) -> None:
+        """Opt the pool into FleetScope tracing.  Lifecycle events ride
+        the per-event Python paths (O(1) per request edge); the
+        vectorized charge/occupancy channels are wired only at
+        level="detail" so lifecycle tracing never touches the hot
+        array path."""
+        self.trace = recorder
+        self._trace_pool = recorder.pool_id(name or self.name,
+                                            instances=self.instances)
+        self.bank.trace = recorder if recorder.detail else None
+        self.bank.trace_pool = self._trace_pool
 
     # --- submission -----------------------------------------------------
 
@@ -217,6 +238,9 @@ class BatchedPoolEngine:
             self.qpos[i] += 1
             s = int(inactive[0])
             plen = req.prompt_len
+            if self.trace is not None and self.trace.detail:
+                self.trace.event(EV_ADMIT, req.rid, self._trace_pool, i,
+                                 float(self.bank.sim_time_s[i]))
             self.slots[i][s] = req
             self._active[i, s] = True
             self.pos[i, s] = plen
@@ -252,6 +276,10 @@ class BatchedPoolEngine:
                 req.generated = [first_tok]
                 req.n_generated = 1
                 req.first_token_time = float(self.bank.sim_time_s[i])
+                if self.trace is not None:
+                    self.trace.event(EV_FIRST_TOKEN, req.rid,
+                                     self._trace_pool, i,
+                                     req.first_token_time)
         self._refresh_heads(i)
 
     # --- per-event bookkeeping (Python: O(1) per request lifetime) ------
@@ -269,6 +297,9 @@ class BatchedPoolEngine:
         req.n_generated = int(self.gen_count[i, s])
         req.generated = None          # analytical mode: ids are synthetic
         req.finish_time = float(self.bank.sim_time_s[i])
+        if self.trace is not None:
+            self.trace.event(EV_COMPLETE, req.rid, self._trace_pool, i,
+                             req.finish_time)
         self.completed[i].append(req)
         self._clear_slot(i, s)
 
@@ -286,12 +317,19 @@ class BatchedPoolEngine:
         return req
 
     def _evict_overflow(self, i: int, s: int) -> None:
-        self.overflowed[i].append(self._back_out_and_evict(i, s))
+        req = self._back_out_and_evict(i, s)
+        if self.trace is not None:
+            self.trace.event(EV_OVERFLOW, req.rid, self._trace_pool, i,
+                             req.ready_time)
+        self.overflowed[i].append(req)
 
     def _evict_escalation(self, i: int, s: int) -> None:
         req = self._back_out_and_evict(i, s)
         req.escalations += 1
         self.n_escalated[i] += 1
+        if self.trace is not None:
+            self.trace.event(EV_ESCALATE, req.rid, self._trace_pool, i,
+                             req.ready_time)
         self.escalated[i].append(req)
 
     def _finish_prefill(self, i: int, s: int) -> None:
@@ -302,6 +340,11 @@ class BatchedPoolEngine:
         req.first_token_time = t
         req.prefill_done = True
         req.ready_time = t
+        if self.trace is not None:
+            self.trace.event(EV_FIRST_TOKEN, req.rid, self._trace_pool,
+                             i, req.first_token_time)
+            self.trace.event(EV_HANDOFF, req.rid, self._trace_pool, i,
+                             req.ready_time)
         self.handoff[i].append(req)
         self.relayed[i].append(req)
         self._clear_slot(i, s)
@@ -379,6 +422,14 @@ class BatchedPoolEngine:
             0.0, np.minimum(b.measure_t1, b.sim_time_s)
             - np.maximum(b.measure_t0, t_start))
         self.m_slot_seconds += n_occ * overlap
+        if self.trace is not None and self.trace.detail:
+            dt = b.sim_time_s - t_start
+            live = dt > 0
+            if live.any():
+                rows = np.flatnonzero(live)
+                self.trace.occupancy_sample(self._trace_pool, rows,
+                                            t_start[rows], dt[rows],
+                                            n_occ[rows])
 
     def _drain_chunks(self, tau_full: np.ndarray) -> None:
         """Chunked-prefill interleave across all rows.  Fast path: the
@@ -396,6 +447,13 @@ class BatchedPoolEngine:
         fast = pl > chunk
         frows = rows[fast]
         if frows.size:
+            if self.trace is not None and self.trace.detail:
+                fslots = first[fast]
+                for k, i in enumerate(frows):
+                    self.trace.event(
+                        EV_PREFILL, self.slots[int(i)][int(fslots[k])].rid,
+                        self._trace_pool, int(i),
+                        float(self.bank.sim_time_s[i]))
             self.bank.charge_prefill_rows(
                 frows, np.full(frows.size, chunk, np.int64),
                 mfu=self.prefill_mfu, streamed_params=self._streamed_params,
@@ -410,6 +468,10 @@ class BatchedPoolEngine:
                     break
                 s = int(s)
                 take = int(min(budget, self.prefill_left[i, s]))
+                if self.trace is not None and self.trace.detail:
+                    self.trace.event(EV_PREFILL, self.slots[i][s].rid,
+                                     self._trace_pool, i,
+                                     float(self.bank.sim_time_s[i]))
                 self.bank.charge_prefill_one(
                     i, take, mfu=self.prefill_mfu,
                     streamed_params=self._streamed_params,
@@ -423,6 +485,10 @@ class BatchedPoolEngine:
                     req.generated = [int(self.tokens[i, s])]
                     req.n_generated = 1
                     req.first_token_time = float(self.bank.sim_time_s[i])
+                    if self.trace is not None:
+                        self.trace.event(EV_FIRST_TOKEN, req.rid,
+                                         self._trace_pool, i,
+                                         req.first_token_time)
 
     def _step_prefill_rows(self, t_start: np.ndarray) -> None:
         """Prefill-phase lockstep: each busy row drains up to one chunk
@@ -440,6 +506,14 @@ class BatchedPoolEngine:
             fast = pl > chunk
             frows = rows[fast]
             if frows.size:
+                if self.trace is not None and self.trace.detail:
+                    fslots = first[fast]
+                    for k, i in enumerate(frows):
+                        self.trace.event(
+                            EV_PREFILL,
+                            self.slots[int(i)][int(fslots[k])].rid,
+                            self._trace_pool, int(i),
+                            float(self.bank.sim_time_s[i]))
                 self.bank.charge_prefill_rows(
                     frows, np.full(frows.size, chunk, np.int64),
                     mfu=self.prefill_mfu,
@@ -457,6 +531,10 @@ class BatchedPoolEngine:
                         break
                     s = int(s)
                     take = int(min(budget, self.prefill_left[i, s]))
+                    if self.trace is not None and self.trace.detail:
+                        self.trace.event(EV_PREFILL, self.slots[i][s].rid,
+                                         self._trace_pool, i,
+                                         float(self.bank.sim_time_s[i]))
                     self.bank.charge_prefill_one(
                         i, take, mfu=self.prefill_mfu,
                         streamed_params=self._streamed_params)

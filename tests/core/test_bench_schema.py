@@ -92,3 +92,58 @@ def test_gate_trips_on_peak_ttft_violation_any_cell():
 def test_kind_kwargs_cover_kinds():
     assert set(fleet_diurnal_bench.KINDS) \
         == set(fleet_diurnal_bench.KIND_KWARGS)
+
+
+# --- FleetScope export schemas ------------------------------------------
+# Nightly CI uploads the Perfetto trace + timeline report as artifacts;
+# downstream consumers key on these shapes, so version bumps must be
+# deliberate (bump the constant AND this pin together).
+
+def test_fleetscope_schema_versions_are_pinned():
+    from repro.core import timeline
+    assert timeline.TRACE_SCHEMA_VERSION == 1
+    assert timeline.TIMELINE_SCHEMA_VERSION == 1
+    assert timeline.SERIES_KEYS == (
+        "watts", "joules", "decode_j", "prefill_j", "idle_j",
+        "handoff_j", "dispatch_j", "tokens", "occupancy", "inflight",
+        "queue_depth", "online")
+    assert timeline.EVENT_NAMES == (
+        "arrive", "route", "admit", "prefill", "first_token", "handoff",
+        "escalate", "overflow", "complete")
+
+
+def test_timeline_json_top_level_shape_is_pinned():
+    from repro.core.timeline import MetricsTimeline, empty_series
+    doc = MetricsTimeline(t0=0.0, t1=2.0, n_bins=2,
+                          pools={"p": empty_series(2)}).to_json()
+    assert set(doc) == {"schema_version", "t0", "t1", "n_bins", "bin_s",
+                        "meta", "pools", "fleet"}
+    assert set(doc["fleet"]) == {"tokens", "joules", "watts", "online",
+                                 "cum_tokens", "cum_joules",
+                                 "tok_per_watt"}
+
+
+def test_chrome_trace_doc_shape_is_pinned():
+    from repro.core.timeline import chrome_trace_doc, span_event
+    doc = chrome_trace_doc([span_event("r0", 0, 0, 0.0, 1.0)],
+                           meta={"pools": ["p"]})
+    assert set(doc) == {"traceEvents", "displayTimeUnit", "otherData"}
+    assert doc["otherData"]["schema_version"] == 1
+    ev = doc["traceEvents"][0]
+    assert ev["ph"] == "X" and ev["ts"] == 0.0 and ev["dur"] == 1e6
+
+
+# --- trace-report gate --------------------------------------------------
+
+fleet_trace_report = _load("fleet_trace_report")
+
+
+def _trace_rows(err=0.0):
+    return [dict(generation="H100", topology="fleetopt",
+                 provisioning="autoscaled", reconcile_max_rel_err=err)]
+
+
+def test_trace_report_gate_keys_on_reconciliation():
+    assert fleet_trace_report.gate(_trace_rows(1e-9)) == []
+    fails = fleet_trace_report.gate(_trace_rows(5e-3))
+    assert len(fails) == 1 and "H100/fleetopt/autoscaled" in fails[0]

@@ -70,3 +70,22 @@ def test_importing_shims_from_compat_is_sanctioned(tmp_path):
                  "from repro.models.compat import set_mesh\n"
                  "from .compat import get_abstract_mesh\n")
     assert lint._scan(root) == []
+
+
+def test_print_in_serving_hot_path_fires(tmp_path):
+    root = _tree(tmp_path, "src/repro/serving/rogue.py",
+                 'def step(self):\n    print("tick", self.t)\n')
+    (rel, line, msg), = lint._scan(root)
+    assert rel == "src/repro/serving/rogue.py" and line == 2
+    assert "TraceRecorder" in msg
+
+
+def test_print_outside_serving_and_opt_out_are_exempt(tmp_path):
+    """Presentation layers print freely; a tagged serving line (e.g. a
+    CLI entry point living next to the engines) opts out explicitly.
+    Method names merely *ending* in print don't fire."""
+    root = _tree(tmp_path, "benchmarks/report.py", 'print("| cell |")\n')
+    _tree(root, "src/repro/serving/cli.py",
+          'print("summary")  # lint: allow-print\n'
+          "self.blueprint(x)\nfoo.print_tree()\n")
+    assert lint._scan(root) == []

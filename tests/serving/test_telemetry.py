@@ -1,0 +1,260 @@
+"""FleetScope observability layer (DESIGN.md §14).
+
+Covers the recorder's two channels end-to-end on a real fleet cell:
+the zero-overhead-when-off guarantee (same seeded run with telemetry
+attached produces a bit-identical report), energy reconciliation
+between the charge channel and the meters, timeline binning mass
+conservation, the Perfetto export shape, SLO violation forensics
+(`core.slo.explain`), the empty-window strict_keys NaN contract, and
+the `conservation_violations` meter audit — plus a hypothesis property
+test fuzzing window-straddling charges through a scalar meter.
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.modelspec import LLAMA31_70B
+from repro.core.profiles import H100_LLAMA70B
+from repro.core.slo import SLOSpec, explain
+from repro.core.timeline import (EVENT_NAMES, SERIES_KEYS,
+                                 TIMELINE_SCHEMA_VERSION,
+                                 TRACE_SCHEMA_VERSION, bin_intervals)
+from repro.core.topospec import TopologySpec
+from repro.core.workloads import AZURE
+from repro.serving import (EnergyMeter, TraceRecorder, build_timeline,
+                           conservation_violations, phase_totals,
+                           prepare_spec, reconcile_energy, to_perfetto)
+from repro.serving.request import latency_percentiles_arrays
+
+N_REQUESTS = 300
+
+
+def _run_cell(telemetry=None, seed=0):
+    spec = TopologySpec.from_kind("fleetopt", H100_LLAMA70B, LLAMA31_70B,
+                                  b_short=4096)
+    sim, reqs, _ = prepare_spec(spec, AZURE, n_requests=N_REQUESTS,
+                                seed=seed, telemetry=telemetry)
+    report = sim.run(reqs)
+    return sim, report
+
+
+@pytest.fixture(scope="module")
+def detail_cell():
+    rec = TraceRecorder(level="detail")
+    sim, report = _run_cell(telemetry=rec)
+    return rec, sim, report
+
+
+def test_zero_overhead_when_off(detail_cell):
+    """Tracing must be observation, not perturbation: the same seeded
+    cell with a detail recorder attached reproduces the telemetry-off
+    report bit-for-bit (json round-trip canonicalizes NaN)."""
+    _, _, report_on = detail_cell
+    _, report_off = _run_cell(telemetry=None)
+    assert json.dumps(report_off, sort_keys=True, default=str) == \
+        json.dumps(report_on, sort_keys=True, default=str)
+
+
+def test_lifecycle_counts_match_report(detail_cell):
+    rec, _, report = detail_cell
+    counts = rec.counts()
+    assert counts["arrive"] == N_REQUESTS
+    assert counts["route"] >= N_REQUESTS        # re-entries add routes
+    assert counts["complete"] == report["fleet"]["completed"]
+    # detail level records admissions and per-chunk prefill progress
+    assert counts["admit"] > 0 and counts["prefill"] > 0
+    ts = [t for t, *_ in rec.golden_stream()]
+    assert ts == sorted(ts)
+
+
+def test_reconcile_energy_sub_tenth_percent(detail_cell):
+    """The charge channel records the same float64 values the meters
+    accumulate — reconciliation is float-rounding small, far inside the
+    <0.1% gate the trace report enforces."""
+    rec, sim, _ = detail_cell
+    banks = [g.engine.bank for g in sim.groups.values()]
+    rows = reconcile_energy(rec, banks)
+    assert set(rows) == {"total", "decode", "prefill", "idle", "handoff",
+                         "dispatch"}
+    for phase, row in rows.items():
+        assert row["rel_err"] < 1e-3, (phase, row)
+    assert rows["total"]["meter_j"] > 0.0
+
+
+def test_timeline_binning_conserves_mass(detail_cell):
+    """Every joule in the charge channel lands in exactly one grid cell:
+    summing the binned series recovers the meter lifetime totals (grid
+    spans all charges, so nothing is clipped)."""
+    rec, sim, _ = detail_cell
+    t_lo = 0.0
+    for _, _, _, start, _, _, _, _ in rec.charges:
+        s = np.asarray(start, np.float64)
+        if s.size:
+            t_lo = min(t_lo, float(np.min(s)))
+    tl = build_timeline(rec, t0=t_lo, n_bins=64)
+    meter = phase_totals(g.engine.bank for g in sim.groups.values())
+    binned = {k: float(tl.fleet(s).sum()) for k, s in
+              (("total", "joules"), ("prefill", "prefill_j"),
+               ("idle", "idle_j"), ("handoff", "handoff_j"),
+               ("decode", "decode_j"), ("dispatch", "dispatch_j"))}
+    for phase in ("total", "decode", "prefill", "idle", "handoff",
+                  "dispatch"):
+        assert binned[phase] == pytest.approx(meter[phase], rel=1e-9,
+                                              abs=1e-9), phase
+    # watts is the same mass divided by the bin width
+    assert float(tl.fleet("watts").sum()) * tl.bin_s == \
+        pytest.approx(meter["total"], rel=1e-9)
+
+
+def test_timeline_to_json_schema(detail_cell):
+    rec, _, _ = detail_cell
+    doc = build_timeline(rec, n_bins=16).to_json()
+    assert doc["schema_version"] == TIMELINE_SCHEMA_VERSION
+    assert doc["n_bins"] == 16
+    for series in doc["pools"].values():
+        assert set(series) == set(SERIES_KEYS)
+        assert all(len(col) == 16 for col in series.values())
+    assert len(doc["fleet"]["tok_per_watt"]) == 16
+    json.dumps(doc)          # strictly JSON-safe (NaN rendered as null)
+
+
+def test_timeline_online_uses_registered_instances(detail_cell):
+    rec, _, _ = detail_cell
+    tl = build_timeline(rec, n_bins=8)
+    for pid, name in enumerate(rec.pool_names):
+        expect = rec.pool_instances.get(pid, 0)
+        assert (tl.pools[name]["online"] == expect).all(), name
+
+
+def test_empty_recorder_timeline():
+    tl = build_timeline(TraceRecorder(level="detail"), n_bins=4)
+    assert tl.t1 > tl.t0 and not tl.pools
+    assert not tl.fleet("joules").any()
+
+
+def test_bin_intervals_straddler_prorates():
+    out = np.zeros(4)
+    edges = np.linspace(0.0, 4.0, 5)
+    bin_intervals([0.5], [2.0], [8.0], edges, out)      # spans bins 0-2
+    assert out.tolist() == [2.0, 4.0, 2.0, 0.0]
+    bin_intervals([2.0], [0.0], [1.0], edges, out)      # point charge
+    assert out[2] == 3.0
+
+
+def test_perfetto_doc_shape(detail_cell):
+    rec, sim, _ = detail_cell
+    doc = to_perfetto(rec, counter_bins=12)
+    assert set(doc) == {"traceEvents", "displayTimeUnit", "otherData"}
+    assert doc["otherData"]["schema_version"] == TRACE_SCHEMA_VERSION
+    assert doc["otherData"]["pools"] == rec.pool_names
+    phs = {ev["ph"] for ev in doc["traceEvents"]}
+    assert phs <= {"X", "i", "C", "M"} and "X" in phs and "C" in phs
+    # every pool appears as a named process
+    procs = {ev["args"]["name"] for ev in doc["traceEvents"]
+             if ev["ph"] == "M" and ev["name"] == "process_name"}
+    assert procs == set(rec.pool_names)
+    json.dumps(doc)
+
+
+def test_explain_attributes_violations(detail_cell):
+    _, sim, report = detail_cell
+    rows = explain(sim, SLOSpec(ttft_p99_s=1e-9))       # everything late
+    assert [set(r) >= {"role", "n_obs", "n_late", "late_frac",
+                       "worst_ttft_s", "first_violation_s",
+                       "last_violation_s", "peak_window_s",
+                       "peak_window_late"} for r in rows]
+    assert sorted(r["role"] for r in rows) == sorted(sim.order)
+    lates = [r["n_late"] for r in rows]
+    assert lates == sorted(lates, reverse=True) and sum(lates) > 0
+    for r in rows:
+        assert r["n_late"] == r["n_obs"]
+        if r["n_late"]:
+            lo, hi = r["peak_window_s"]
+            assert lo <= hi and r["peak_window_late"] > 0
+    # a generous SLO attributes nothing
+    assert all(r["n_late"] == 0
+               for r in explain(sim, SLOSpec(ttft_p99_s=1e9)))
+
+
+def test_strict_keys_empty_window():
+    empty = np.empty(0)
+    out = latency_percentiles_arrays(empty, empty, empty, empty,
+                                     strict_keys=True)
+    assert set(out) == {"ttft_p50_s", "ttft_p99_s", "e2e_p99_s",
+                        "tpot_p50_ms", "tpot_p99_ms"}
+    assert all(math.isnan(v) for v in out.values())
+    # legacy default keeps dropping the keys (callers .get with defaults)
+    assert latency_percentiles_arrays(empty, empty, empty, empty) == {}
+
+
+def test_conservation_violations_clean_and_corrupt(detail_cell):
+    _, sim, _ = detail_cell
+    for g in sim.groups.values():
+        assert conservation_violations(g.engine.bank) == []
+    m = EnergyMeter(H100_LLAMA70B)
+    m.charge_prefill(512, streamed_params=1e9)
+    m.charge_decode_step(4, 1000.0)
+    m.charge_idle(0.5)
+    assert conservation_violations(m) == []
+    m.m_joules = m.joules + 5.0         # window cannot exceed lifetime
+    bad = conservation_violations(m)
+    assert bad and any("m_joules" in v for v in bad)
+
+
+def test_invalid_trace_level_rejected():
+    with pytest.raises(ValueError):
+        TraceRecorder(level="verbose")
+
+
+# --- property test: window-straddling charges stay conserved -------------
+
+try:
+    import hypothesis  # noqa: F401
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    ops = st.lists(
+        st.tuples(st.sampled_from(["decode", "prefill", "idle",
+                                   "handoff"]),
+                  st.integers(1, 64),       # n_active / tokens / KB
+                  st.floats(0.0, 2.0)),     # dt / overlap span
+        min_size=1, max_size=40)
+
+    @settings(max_examples=40, deadline=None)
+    @given(ops=ops, t0=st.floats(0.0, 5.0), span=st.floats(0.0, 5.0),
+           dispatch_s=st.sampled_from([0.0, 5e-4]))
+    def test_property_straddling_charges_conserve(ops, t0, span,
+                                                  dispatch_s):
+        """Any charge sequence against any measurement window keeps the
+        meter's accounting identities: windowed counters bounded by
+        lifetime totals, non-negative decode residual, dispatch inside
+        decode — and the trace charge channel reconciles with the meter
+        to float rounding even when charges straddle the window."""
+        rec = TraceRecorder(level="detail")
+        m = EnergyMeter(H100_LLAMA70B, measure_t0=t0,
+                        measure_t1=t0 + span, dispatch_s=dispatch_s)
+        m.trace = rec
+        m.trace_pool = rec.pool_id("p", instances=1)
+        for kind, n, f in ops:
+            if kind == "decode":
+                m.charge_decode_step(n, 500.0 + 100.0 * n)
+            elif kind == "prefill":
+                m.charge_prefill(16 * n, streamed_params=1e9,
+                                 overlap_s=0.5 * f)
+            elif kind == "idle":
+                m.charge_idle(f)
+            else:
+                m.charge_handoff(1024.0 * n, start_s=m.sim_time_s - f,
+                                 duration_s=f, j_per_byte=2e-10)
+        assert conservation_violations(m) == []
+        for phase, row in reconcile_energy(rec, [m]).items():
+            assert row["rel_err"] < 1e-9, (phase, row)
+else:                                                  # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed (requirements-dev)")
+    def test_property_straddling_charges_conserve():
+        pass

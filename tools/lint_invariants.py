@@ -25,6 +25,15 @@ time:
    flagged; stable names like ``NamedSharding``/``PartitionSpec`` are
    fine anywhere.)
 
+3. **Serving telemetry goes through TraceRecorder.**  The engine hot
+   loops (everything under ``src/repro/serving/``) emit observability
+   through the FleetScope recorder (``serving.telemetry``) — that is
+   what keeps the zero-overhead-when-off guarantee auditable.  An
+   ad-hoc ``print(...)`` in the serving stack is either debug residue
+   or a new side channel the trace schema doesn't know about; both are
+   flagged.  (Benchmarks, tools and examples print freely — they are
+   the presentation layer, not the hot path.)
+
 Run:  python tools/lint_invariants.py          (from the repo root)
 Exit: 0 clean, 1 with one ``path:line: message`` per violation.
 """
@@ -49,6 +58,12 @@ _MESH_API = re.compile(
     r"\b(?:get_abstract_mesh|set_mesh|use_mesh|AxisType)\b")
 _MESH_ALLOWED = ("src/repro/models/compat.py",)
 
+# bare print calls in the serving hot path (telemetry must ride the
+# FleetScope recorder); `# lint: allow-print` opts a line out explicitly
+_PRINT_CALL = re.compile(r"(?<![\w.])print\s*\(")
+_PRINT_SCOPE = "src/repro/serving/"
+_PRINT_OPT_OUT = "# lint: allow-print"
+
 
 def _scan(root: pathlib.Path = REPO) -> list:
     """All violations as (relpath, lineno, message) triples."""
@@ -71,6 +86,14 @@ def _scan(root: pathlib.Path = REPO) -> list:
                                 "jax.sharding mesh-context API outside "
                                 "repro.models.compat — import the shim "
                                 "from repro.models.compat instead"))
+                if (rel.startswith(_PRINT_SCOPE)
+                        and _PRINT_CALL.search(line)
+                        and _PRINT_OPT_OUT not in line):
+                    out.append((rel, n,
+                                "print() in the serving hot path — emit "
+                                "through serving.telemetry.TraceRecorder "
+                                "(or tag '# lint: allow-print' if this "
+                                "is genuinely presentation code)"))
     return out
 
 
